@@ -1,0 +1,96 @@
+"""Shared world-building for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (Autoscaler, BENCH_FUNCTIONS, Cluster, GroundTruth,
+                        GsightScheduler, JiaguScheduler, K8sScheduler,
+                        OwlScheduler, PerfPredictor, ProfileStore, QoSStore,
+                        ScalingConfig, SimConfig, SimResult, Simulation,
+                        generate_dataset, realworld_suite, synthetic_functions)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+CFORK_MS = 8.4      # cfork container init (paper §7.2)
+DOCKER_MS = 85.5    # docker container init
+
+
+@dataclass
+class World:
+    specs: dict
+    gt: GroundTruth
+    store: ProfileStore
+    qos: QoSStore
+    predictor: PerfPredictor
+
+
+def build_world(n_synthetic: int = 0, seed: int = 0,
+                n_train: int = 1500, n_trees: int = 24) -> World:
+    """The six paper workloads (+ optional synthetic extras), with a
+    predictor trained offline on profiling/training-node data."""
+    specs = dict(BENCH_FUNCTIONS)
+    if n_synthetic:
+        specs.update(synthetic_functions(n_synthetic, seed=seed + 1))
+    gt = GroundTruth(seed=seed)
+    store = ProfileStore(seed=seed)
+    qos = QoSStore(store, gt)
+    pred = PerfPredictor(n_trees=n_trees, max_depth=8, seed=seed)
+    X, y = generate_dataset(specs, gt, store, qos, n_train, seed=seed + 2)
+    pred.add_dataset(X, y)
+    return World(specs, gt, store, qos, pred)
+
+
+def fresh_predictor(world: World, seed: int = 0) -> PerfPredictor:
+    pred = PerfPredictor(n_trees=24, max_depth=8, seed=seed)
+    X, y = generate_dataset(world.specs, world.gt, world.store, world.qos,
+                            1500, seed=seed + 2)
+    pred.add_dataset(X, y)
+    return pred
+
+
+def make_sim(world: World, scheduler: str, trace, *, dual: bool = True,
+             release_s: float = 45.0, keepalive_s: float = 60.0,
+             init_ms: float = CFORK_MS, migrate: bool = True,
+             collect_samples: bool = False) -> Simulation:
+    cluster = Cluster(world.specs)
+    pred = fresh_predictor(world) if scheduler in ("jiagu", "gsight") \
+        else None
+    if scheduler == "jiagu":
+        sched = JiaguScheduler(cluster, world.store, world.qos, pred)
+    elif scheduler == "gsight":
+        sched = GsightScheduler(cluster, world.store, world.qos, pred)
+    elif scheduler == "owl":
+        sched = OwlScheduler(cluster, world.store, world.qos)
+    else:
+        sched = K8sScheduler(cluster, world.store, world.qos)
+    aut = Autoscaler(cluster, sched, ScalingConfig(
+        release_s=release_s, keepalive_s=keepalive_s,
+        dual_staged=dual and scheduler == "jiagu", init_ms=init_ms,
+        migrate=migrate))
+    return Simulation(world.specs, trace, sched, aut, world.gt, world.store,
+                      world.qos, predictor=pred,
+                      cfg=SimConfig(collect_samples=collect_samples))
+
+
+def save_artifact(name: str, record: dict):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, f"{name}.json"), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def emit(rows: List[dict], keys: Optional[List[str]] = None):
+    """CSV-ish stdout contract used by benchmarks.run."""
+    if not rows:
+        return
+    keys = keys or list(rows[0])
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))

@@ -1,0 +1,47 @@
+"""Paper Fig 13: normalized function density (K8s = 1.0) across the four
+real-world traces, for K8s / Owl / Gsight / Jiagu-NoDS / Jiagu-45 /
+Jiagu-30, plus QoS violation rates (must stay < 10%)."""
+from __future__ import annotations
+
+from .common import build_world, emit, make_sim, save_artifact
+
+from repro.core import realworld_suite
+
+VARIANTS = [
+    ("k8s", dict()),
+    ("owl", dict()),
+    ("gsight", dict()),
+    ("jiagu-nods", dict(dual=False)),
+    ("jiagu-45", dict(dual=True, release_s=45.0)),
+    ("jiagu-30", dict(dual=True, release_s=30.0)),
+]
+
+
+def run(duration: int = 600, quick: bool = False):
+    world = build_world()
+    fns = sorted(world.specs)
+    traces = realworld_suite(fns, duration_s=duration,
+                             n_traces=2 if quick else 4)
+    rows, record = [], {}
+    for trace in traces:
+        base = None
+        for name, kw in VARIANTS:
+            sched = name.split("-")[0]
+            res = make_sim(world, sched, trace, **kw).run()
+            if name == "k8s":
+                base = res.density
+            rows.append({
+                "trace": trace.name, "system": name,
+                "density": round(res.density, 3),
+                "norm_density": round(res.density / base, 3),
+                "qos_violation": round(res.qos_violation_rate, 4),
+                "nodes_used": res.node_seconds / max(res.ticks, 1),
+            })
+            record[f"{trace.name}/{name}"] = rows[-1]
+    emit(rows)
+    save_artifact("density", record)
+    return record
+
+
+if __name__ == "__main__":
+    run()

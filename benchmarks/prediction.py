@@ -1,0 +1,140 @@
+"""Paper Fig 15 + Fig 16 + Fig 17-a: prediction accuracy, overfit check,
+scalability in #functions, convergence for new functions, model-zoo
+comparison, training time and input dimensionality."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import build_world, emit, save_artifact
+
+from repro.core import (GroundTruth, PerfPredictor, ProfileStore, QoSStore,
+                        generate_dataset, synthetic_functions)
+from repro.core.predictor import (MODEL_ZOO, N_FEATURES, PerfPredictor,
+                                  RandomForestRegressor, build_features)
+
+
+def _rel_err(p, y):
+    return float(np.mean(np.abs(np.asarray(p) - y) / np.maximum(y, 1e-9)))
+
+
+def _world(n_fns, seed=0):
+    specs = synthetic_functions(n_fns, seed=seed)
+    gt = GroundTruth(seed=0)
+    store = ProfileStore(seed=0)
+    qos = QoSStore(store, gt)
+    return specs, gt, store, qos
+
+
+def run(quick: bool = False):
+    rows = []
+    record = {}
+
+    # -- Fig 15-a: accuracy, overfit split, 6/30/60 functions ---------------
+    for n_fns in ([6, 30] if quick else [6, 30, 60]):
+        specs, gt, store, qos = _world(n_fns)
+        n = 1500 if n_fns <= 6 else 3000
+        X, y = generate_dataset(specs, gt, store, qos, n, seed=3)
+        Xt, yt = generate_dataset(specs, gt, store, qos, 500, seed=77)
+        pred = PerfPredictor(n_trees=24, max_depth=8, seed=0)
+        pred.add_dataset(X, y)
+        p = pred.predict(Xt)
+        half = len(yt) // 2
+        rows.append({
+            "fig": "15a", "functions": n_fns,
+            "err": round(_rel_err(p, yt), 4),
+            "err_split1": round(_rel_err(p[:half], yt[:half]), 4),
+            "err_split2": round(_rel_err(p[half:], yt[half:]), 4),
+        })
+    emit(rows)
+
+    # -- Fig 15-b: convergence for a new function ----------------------------
+    specs, gt, store, qos = _world(6)
+    names = sorted(specs)
+    old = {k: specs[k] for k in names[:5]}
+    pred = PerfPredictor(n_trees=16, max_depth=8, seed=0)
+    X, y = generate_dataset(old, gt, store, qos, 1200, seed=1)
+    pred.add_dataset(X, y)
+    mixed = {names[5]: specs[names[5]], names[0]: specs[names[0]],
+             names[1]: specs[names[1]]}
+    Xn, yn = generate_dataset(mixed, gt, store, qos, 120, seed=9,
+                              include_solo=False)
+    conv = []
+    for n_added in [0, 5, 10, 20, 30]:
+        for xi, yi in zip(Xn[len(conv) and conv[-1]["samples"] or 0:
+                             n_added], yn[:n_added]):
+            pass
+        p2 = PerfPredictor(n_trees=16, max_depth=8, seed=0)
+        p2._X, p2._y = list(pred._X), list(pred._y)
+        for xi, yi in zip(Xn[:n_added], yn[:n_added]):
+            p2._X.append(np.asarray(xi, np.float32))
+            p2._y.append(float(yi))
+        p2.retrain()
+        err = _rel_err(p2.predict(Xn[60:]), yn[60:])
+        conv.append({"fig": "15b", "samples": n_added,
+                     "new_fn_err": round(err, 4)})
+    print()
+    emit(conv)
+
+    # -- Fig 16: model zoo ----------------------------------------------------
+    specs, gt, store, qos = _world(6)
+    X, y = generate_dataset(specs, gt, store, qos, 1500, seed=3)
+    Xt, yt = generate_dataset(specs, gt, store, qos, 400, seed=78)
+    ly = np.log(np.maximum(y, 1e-6))
+    zoo_rows = []
+    for name, ctor in MODEL_ZOO.items():
+        m = ctor()
+        t0 = time.perf_counter()
+        m.fit(X, ly)   # same log-target for all (fair comparison)
+        train_s = time.perf_counter() - t0
+        err = _rel_err(np.exp(np.asarray(m.predict(Xt))), yt)
+        zoo_rows.append({"fig": "16", "model": name,
+                         "err": round(err, 4),
+                         "train_s": round(train_s, 3)})
+    print()
+    emit(zoo_rows)
+
+    # -- Fig 17-a: training time + dimensionality -----------------------------
+    # Jiagu function-granularity features vs instance-granularity (Gsight):
+    # instance-granularity input grows with instances per node (~24 cols of
+    # 13 metrics), Jiagu stays at N_FEATURES.
+    inst_dims = 13 * 24 + 2
+    t0 = time.perf_counter()
+    RandomForestRegressor(24, 8, seed=0).fit(X, ly)
+    jiagu_train = time.perf_counter() - t0
+    Xb = np.repeat(X, 4, axis=1)[:, : inst_dims]
+    t0 = time.perf_counter()
+    RandomForestRegressor(24, 8, seed=0).fit(Xb, ly)
+    inst_train = time.perf_counter() - t0
+    fig17 = [{"fig": "17a", "model": "jiagu(function-gran)",
+              "dims": N_FEATURES, "train_s": round(jiagu_train, 3)},
+             {"fig": "17a", "model": "instance-granularity",
+              "dims": inst_dims, "train_s": round(inst_train, 3)}]
+    print()
+    emit(fig17)
+
+    # -- Fig 17-b: batched inference cost -------------------------------------
+    pred = PerfPredictor(n_trees=24, max_depth=8, seed=0)
+    pred.add_dataset(X, y)
+    batch_rows = []
+    for bs in [1, 10, 50, 100]:
+        Xq = np.repeat(Xt[:1], bs, axis=0)
+        reps = 50
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            pred.model.predict(Xq)
+        ms = (time.perf_counter() - t0) / reps * 1e3
+        batch_rows.append({"fig": "17b", "batch": bs,
+                           "infer_ms": round(ms, 4)})
+    print()
+    emit(batch_rows)
+
+    record = {"fig15a": rows, "fig15b": conv, "fig16": zoo_rows,
+              "fig17a": fig17, "fig17b": batch_rows}
+    save_artifact("prediction", record)
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Fig 14: (a) per-function QoS violation rates on Trace A for all
+systems; (b) cold starts avoided by dual-staged scaling + on-demand
+migration at 45 s and 30 s release sensitivity."""
+from __future__ import annotations
+
+from .common import build_world, emit, make_sim, save_artifact
+
+from repro.core import realworld_suite
+
+
+def run(duration: int = 600, quick: bool = False):
+    world = build_world()
+    fns = sorted(world.specs)
+    traces = realworld_suite(fns, duration_s=duration,
+                             n_traces=2 if quick else 4)
+
+    # (a) per-function QoS violations on Trace A
+    rows_a = []
+    for system, kw in [("k8s", {}), ("gsight", {}),
+                       ("jiagu-nods", dict(dual=False)),
+                       ("jiagu-45", dict(release_s=45.0)),
+                       ("jiagu-30", dict(release_s=30.0))]:
+        res = make_sim(world, system.split("-")[0], traces[0], **kw).run()
+        per = res.per_fn_violation_rate()
+        rows_a.append({"system": system,
+                       **{fn: round(per.get(fn, 0.0), 4) for fn in fns},
+                       "overall": round(res.qos_violation_rate, 4)})
+    emit(rows_a)
+
+    # (b) re-routing composition per release sensitivity
+    rows_b = []
+    for rel in [45.0, 30.0]:
+        for trace in traces:
+            res = make_sim(world, "jiagu", trace, release_s=rel).run()
+            sc = res.scaling
+            total_reroute = sc.logical_cold_starts + sc.blocked_logical
+            rows_b.append({
+                "trace": trace.name, "release_s": rel,
+                "logical_cold_starts": sc.logical_cold_starts,
+                "would_be_real(blocked)": sc.blocked_logical,
+                "migrations": sc.migrations,
+                "real_cold_starts": sc.real_cold_starts,
+                "blocked_frac": round(sc.blocked_logical /
+                                      max(total_reroute, 1), 4),
+                "releases": sc.releases,
+            })
+    print()
+    emit(rows_b)
+    save_artifact("qos_coldstart", {"fig14a": rows_a, "fig14b": rows_b})
+    return {"fig14a": rows_a, "fig14b": rows_b}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""§Roofline deliverable: formats the dry-run artifacts into the
+per-(arch x shape x mesh) roofline table (terms, bottleneck, useful
+ratio, roofline fraction) and the what-would-move-it-down notes."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import ARTIFACTS, emit
+
+DRYRUN = os.path.join(ARTIFACTS, "dryrun")
+
+NOTES = {
+    "compute": "shard the replicated-compute dims (heads/experts) or cut "
+               "dispatch overhead (sort-based MoE)",
+    "memory": "remat policy / microbatching to cut activation traffic; "
+              "fuse elementwise chains",
+    "collective": "reshard to cut all-gathers; overlap collectives with "
+                  "compute (latency-hiding scheduler)",
+}
+
+
+def load(tag: str = "baseline"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, f"{tag}--*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": r.get("status"),
+                         "note": r.get("reason", "")})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok", "step": r["step"],
+            "compute_s": f"{rf['compute_s']:.3e}",
+            "memory_s": f"{rf['memory_s']:.3e}",
+            "collective_s": f"{rf['collective_s']:.3e}",
+            "bottleneck": rf["bottleneck"],
+            "useful_ratio": round(rf.get("useful_ratio", 0), 3),
+            "roofline_frac": round(rf.get("roofline_frac", 0), 4),
+            "note": NOTES.get(rf["bottleneck"], ""),
+        })
+    return rows
+
+
+def run(tag: str = "baseline", quick: bool = False):
+    rows = load(tag)
+    ok = [r for r in rows if r["status"] == "ok"]
+    emit(rows, keys=["arch", "shape", "mesh", "status", "bottleneck",
+                     "compute_s", "memory_s", "collective_s",
+                     "useful_ratio", "roofline_frac"])
+    if ok:
+        n_c = sum(1 for r in ok if r["bottleneck"] == "compute")
+        n_m = sum(1 for r in ok if r["bottleneck"] == "memory")
+        n_x = sum(1 for r in ok if r["bottleneck"] == "collective")
+        print(f"\n# {len(ok)} compiled cells: {n_c} compute-bound, "
+              f"{n_m} memory-bound, {n_x} collective-bound")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(sys.argv[1] if len(sys.argv) > 1 else "baseline")

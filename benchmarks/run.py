@@ -1,0 +1,51 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+| paper artifact                          | module            |
+|-----------------------------------------|-------------------|
+| Fig 11/12 scheduling cost + cold start  | scheduling_cost   |
+| Table 2 overhead vs container systems   | scheduling_cost   |
+| Fig 13 normalized density               | density           |
+| Fig 14 QoS violations + reduced starts  | qos_coldstart     |
+| Fig 15/16/17 prediction + model zoo     | prediction        |
+| kernel/arch microbench                  | model_perf        |
+| §Roofline table (reads dry-run JSONs)   | roofline_report   |
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter traces / fewer repetitions")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (density, model_perf, prediction, qos_coldstart,
+                   roofline_report, scheduling_cost)
+    suites = [
+        ("scheduling_cost", lambda: scheduling_cost.run(
+            duration=300 if args.quick else 600, quick=args.quick)),
+        ("density", lambda: density.run(
+            duration=300 if args.quick else 600, quick=args.quick)),
+        ("qos_coldstart", lambda: qos_coldstart.run(
+            duration=300 if args.quick else 600, quick=args.quick)),
+        ("prediction", lambda: prediction.run(quick=args.quick)),
+        ("model_perf", lambda: model_perf.run(quick=args.quick)),
+        ("roofline_report", lambda: roofline_report.run()),
+    ]
+    for name, fn in suites:
+        if args.only and name != args.only:
+            continue
+        print(f"\n{'=' * 70}\n# benchmark: {name}\n{'=' * 70}")
+        t0 = time.time()
+        fn()
+        print(f"# {name} done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Paper Fig 11 + Fig 12 + Table 2: scheduling cost, model inferences per
+schedule, and cold-start latency with cfork / docker container init.
+
+Extreme traces (Fig 11): ``timer`` (best case — all fast path) and
+``flip`` (worst case — every schedule is a slow path).  Real-world traces
+(Fig 12): four Huawei-like trace sets.  Jiagu vs Gsight (same predictor).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (CFORK_MS, DOCKER_MS, build_world, emit, make_sim,
+                     save_artifact)
+
+from repro.core import flip_trace, realworld_suite, timer_trace
+
+# Table 2 container-start systems (paper-reported init latencies, ms)
+TABLE2_SYSTEMS = {
+    "AWS Snapstart": 100.0, "Replayable": 54.0, "Fireworks": 50.0,
+    "SOCK": 20.0, "Molecule": 8.4, "SEUSS": 7.5, "Catalyzer": 0.97,
+    "Faasm": 0.5,
+}
+
+
+def _sched_stats(res):
+    s = res.sched
+    n_sched = max(s.decisions, 1)
+    return {
+        "sched_ms_mean": s.mean_latency_ms,
+        "inferences_per_schedule": s.critical_inference_calls / n_sched,
+        "rows_per_schedule": s.critical_inference_rows / n_sched,
+        "fast": s.fast, "slow": s.slow,
+        "fast_frac": s.fast / max(s.fast + s.slow, 1),
+    }
+
+
+def run(duration: int = 600, quick: bool = False):
+    world = build_world()
+    fns = sorted(world.specs)
+    rows = []
+
+    # -- Fig 11: extreme traces --------------------------------------------
+    # timer: scale events every period (period > keepalive so evictions
+    # actually happen), load quantized to the function's saturated RPS
+    traces = {
+        "timer(best)": timer_trace(
+            fns[0], duration_s=duration, period_s=90,
+            rps_per_inst=world.specs[fns[0]].saturated_rps),
+        "flip(worst)": flip_trace(fns[:3], duration_s=duration),
+    }
+    # -- Fig 12: real-world traces -----------------------------------------
+    for tr in realworld_suite(fns, duration_s=duration,
+                              n_traces=2 if quick else 4):
+        traces[tr.name] = tr
+
+    record = {}
+    for tname, trace in traces.items():
+        per_sched = {}
+        for sched in ["jiagu", "gsight"]:
+            res = make_sim(world, sched, trace, dual=False).run()
+            per_sched[sched] = _sched_stats(res)
+        j, g = per_sched["jiagu"], per_sched["gsight"]
+        cost_red = 1 - j["sched_ms_mean"] / max(g["sched_ms_mean"], 1e-9)
+        inf_red = 1 - j["rows_per_schedule"] / max(g["rows_per_schedule"],
+                                                   1e-9)
+        # paper-hardware normalization: the paper's ported Gsight spends
+        # 21.78 ms of model inference per schedule; our from-scratch RFR
+        # takes ~0.1 ms/call, which compresses the measured ms ratio.
+        # Scale both systems' inference calls to the paper's per-call
+        # cost to compare against the paper's Fig 11/12 regime.
+        PAPER_GSIGHT_MS = 21.78
+        per_call = PAPER_GSIGHT_MS / max(g["inferences_per_schedule"],
+                                         1e-9)
+        j_norm = j["inferences_per_schedule"] * per_call + 0.05
+        g_norm = PAPER_GSIGHT_MS
+        for init_name, init_ms in [("cfork", CFORK_MS),
+                                   ("docker", DOCKER_MS)]:
+            cs_j = j["sched_ms_mean"] + init_ms
+            cs_g = g["sched_ms_mean"] + init_ms
+            rows.append({
+                "trace": tname, "init": init_name,
+                "jiagu_sched_ms": round(j["sched_ms_mean"], 3),
+                "gsight_sched_ms": round(g["sched_ms_mean"], 3),
+                "sched_cost_reduction": round(cost_red, 3),
+                "inference_reduction": round(inf_red, 3),
+                "norm_cost_reduction": round(1 - j_norm / g_norm, 3),
+                "jiagu_cold_ms": round(cs_j, 2),
+                "gsight_cold_ms": round(cs_g, 2),
+                "cold_start_reduction": round(1 - cs_j / cs_g, 3),
+                "norm_cold_reduction": round(
+                    1 - (j_norm + init_ms) / (g_norm + init_ms), 3),
+                "jiagu_fast_frac": round(j["fast_frac"], 3),
+            })
+        record[tname] = per_sched
+    emit(rows)
+
+    # -- Table 2: scheduling overhead vs container-start systems ------------
+    g_ms = np.mean([record[t]["gsight"]["sched_ms_mean"]
+                    for t in record if t.startswith("Trace")] or
+                   [record["timer(best)"]["gsight"]["sched_ms_mean"]])
+    j_ms = np.mean([record[t]["jiagu"]["sched_ms_mean"]
+                    for t in record if t.startswith("Trace")] or
+                   [record["timer(best)"]["jiagu"]["sched_ms_mean"]])
+    t2 = [{"system": name, "container_ms": init,
+           "gsight_overhead": f"{g_ms / init:.1%}",
+           "jiagu_overhead": f"{j_ms / init:.1%}"}
+          for name, init in TABLE2_SYSTEMS.items()]
+    print()
+    emit(t2)
+    record["table2"] = {"gsight_ms": g_ms, "jiagu_ms": j_ms}
+    save_artifact("scheduling_cost", record)
+    return record
+
+
+if __name__ == "__main__":
+    run()

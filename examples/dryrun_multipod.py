@@ -1,0 +1,57 @@
+"""Multi-pod dry-run walkthrough: lower + compile ONE cell against the
+production meshes and print the memory/cost/roofline summary.
+
+  PYTHONPATH=src python examples/dryrun_multipod.py \
+      [--arch qwen1.5-110b] [--shape train_4k] [--mesh both]
+
+(The full 80-cell sweep is ``bash benchmarks/run_dryrun.sh``.)
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    from repro.launch.dryrun import run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-110b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mesh in meshes:
+        rec = run_cell(args.arch, args.shape, mesh)
+        print(f"\n=== {args.arch} x {args.shape} x {mesh} "
+              f"({'2x16x16' if mesh == 'multi' else '16x16'}) ===")
+        if rec["status"] != "ok":
+            print(rec)
+            continue
+        rf = rec["roofline"]
+        mem = rec["memory"]
+        print(f"step={rec['step']} dispatch={rec['dispatch']} "
+              f"compile={rec['compile_s']:.1f}s")
+        print(f"per-device arg bytes: "
+              f"{mem['arg_bytes_analytic_per_device']/2**30:.2f} GiB")
+        print(f"roofline: compute={rf['compute_s']:.3e}s "
+              f"memory={rf['memory_s']:.3e}s "
+              f"collective={rf['collective_s']:.3e}s "
+              f"-> bottleneck: {rf['bottleneck']}")
+        print(f"useful_ratio={rf['useful_ratio']:.3f} "
+              f"roofline_frac={rf['roofline_frac']:.4f}")
+        cc = rec["collectives"]
+        print("collective schedule:",
+              {k: f"{v/2**30:.2f}GiB" for k, v in cc.items()
+               if isinstance(v, float) and v > 0})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: the public API in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. pick an architecture config      (repro.configs)
+2. train a smoke-scale variant      (repro.launch.train)
+3. serve it with continuous batching (repro.serving)
+4. schedule replicas with Jiagu     (repro.core)
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import InputShape, get_config, get_smoke_config, \
+    list_archs
+from repro.launch.train import train_loop
+from repro.models import model as model_lib
+from repro.serving.engine import Request, ServingEngine
+
+# -- 1. configs --------------------------------------------------------------
+print("assigned architectures:", ", ".join(list_archs()))
+full = get_config("gemma2-2b")
+print(f"gemma2-2b: {full.n_layers}L d={full.d_model} "
+      f"params={full.param_count()/1e9:.2f}B")
+cfg = get_smoke_config("gemma2-2b")     # laptop-scale, same block pattern
+
+# -- 2. train a few steps ------------------------------------------------------
+mesh = jax.make_mesh((1, 1), ("data", "model"))
+shape = InputShape("quickstart", 128, 4, "train")
+state, losses = train_loop(cfg, shape, mesh, steps=20, log_every=5)
+print(f"trained 20 steps: loss {losses[0]:.2f} -> {losses[-1]:.2f}")
+
+# -- 3. serve it ----------------------------------------------------------------
+eng = ServingEngine(cfg, state["params"], slots=2, max_len=128)
+eng.scale_up(2)
+rng = np.random.default_rng(0)
+for i in range(4):
+    eng.submit(Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, 16).astype(np.int32), max_new=8))
+done = eng.drain()
+print(f"served {len(done)} requests; sample completion: {done[0].tokens}")
+
+# -- 4. Jiagu-schedule replicas ---------------------------------------------------
+from repro.core import (Cluster, GroundTruth, JiaguScheduler, PerfPredictor,
+                        ProfileStore, QoSStore, arch_functions,
+                        generate_dataset)
+
+specs = arch_functions()                 # one serving function per arch
+gt = GroundTruth(seed=0)
+store = ProfileStore(seed=0)
+qos = QoSStore(store, gt)
+pred = PerfPredictor(n_trees=16, max_depth=8, seed=0)
+X, y = generate_dataset(specs, gt, store, qos, 800, seed=1)
+pred.add_dataset(X, y)
+
+cluster = Cluster(specs)
+sched = JiaguScheduler(cluster, store, qos, pred)
+fn = "serve-gemma2-2b"
+sched.schedule(fn, 3, now=0.0)           # slow path: predict capacity
+sched.on_tick(1.0)                       # async capacity-table update
+placements = sched.schedule(fn, 2, now=2.0)   # fast path: table lookup
+m = sched.metrics
+print(f"scheduled 5 replicas: fast={m.fast} slow={m.slow} "
+      f"mean latency {m.mean_latency_ms:.2f} ms")

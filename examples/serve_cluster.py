@@ -1,0 +1,86 @@
+"""Jiagu end-to-end serving: the paper's control plane scheduling REAL
+model replicas (smoke-scale gemma2 + mamba2), driven by a fluctuating
+request trace.  Dual-staged scaling releases/revives replicas as load
+moves; every completion is a real greedy decode.
+
+  PYTHONPATH=src python examples/serve_cluster.py [--seconds 60]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models import model as model_lib
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=int, default=30)
+    ap.add_argument("--release-after", type=int, default=6,
+                    help="ticks of low load before releasing a replica")
+    args = ap.parse_args()
+
+    engines = {}
+    for arch in ["gemma2-2b", "mamba2-2.7b"]:
+        cfg = get_smoke_config(arch)
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, params, slots=2, max_len=96)
+        eng.scale_up(2)
+        engines[arch] = (cfg, eng)
+
+    rng = np.random.default_rng(0)
+    rid = 0
+    low_ticks = {a: 0 for a in engines}
+    stats = {a: dict(logical=0, released=0, done=0) for a in engines}
+
+    for t in range(args.seconds):
+        for arch, (cfg, eng) in engines.items():
+            # sinusoidal offered load, out of phase per arch
+            lam = 1.5 + 1.4 * np.sin(t / 5.0 + (0 if arch < "m" else 2.5))
+            for _ in range(rng.poisson(max(lam, 0.05))):
+                eng.submit(Request(rid=rid, prompt=rng.integers(
+                    0, cfg.vocab_size, 12).astype(np.int32), max_new=4))
+                rid += 1
+            # dual-staged autoscaling on queue pressure
+            busy = sum(i.n_active() for i in eng.instances.values())
+            cap = eng.n_saturated() * eng.slots
+            if eng.queue and eng.n_saturated() < len(eng.instances):
+                got = eng.logical_start(1)       # <1 ms re-route
+                stats[arch]["logical"] += got
+                low_ticks[arch] = 0
+            elif busy < cap // 2 and not eng.queue:
+                low_ticks[arch] += 1
+                if low_ticks[arch] >= args.release_after and \
+                        eng.n_saturated() > 1:
+                    eng.release(1)
+                    stats[arch]["released"] += 1
+                    low_ticks[arch] = 0
+            else:
+                low_ticks[arch] = 0
+            eng.tick()
+        if t % 10 == 0:
+            line = " | ".join(
+                f"{a}: sat={e.n_saturated()}/{len(e.instances)} "
+                f"q={len(e.queue)} done={len(e.done)}"
+                for a, (_c, e) in engines.items())
+            print(f"t={t:3d}  {line}", flush=True)
+
+    for arch, (cfg, eng) in engines.items():
+        done = eng.drain()
+        lats = [r.latency_ms for r in done]
+        p90 = float(np.percentile(lats, 90)) if lats else 0.0
+        s = stats[arch]
+        print(f"{arch}: {len(done)} requests served, p90 {p90:.0f} ms, "
+              f"{s['released']} releases, {s['logical']} logical cold "
+              f"starts (0 real cold starts after warmup)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end training driver: train a ~100M-parameter gemma2-family LM
+on the repo's own source code (byte-level) for a few hundred steps with
+checkpointing and fault-tolerance enabled.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--tiny]
+
+``--tiny`` shrinks to a ~1M model for a fast demo; the default ~100M
+config takes a while per step on 1 CPU core — it is the honest "train a
+~100M model for a few hundred steps" driver and checkpoints every 50
+steps so an interrupted run resumes (rerun the same command).
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs.base import InputShape, get_config
+from repro.launch.train import train_loop
+from repro.optim.adamw import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    args = ap.parse_args()
+
+    base = get_config("gemma2-2b")
+    if args.tiny:
+        cfg = base.replace(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                           head_dim=32, d_ff=512, vocab_size=256,
+                           window=128, dtype="float32")
+        batch, seq = args.batch or 8, args.seq or 256
+    else:
+        # ~100M-param gemma2-family model (byte vocab keeps the embedding
+        # small so the budget goes to the blocks)
+        cfg = base.replace(n_layers=10, d_model=768, n_heads=8,
+                           n_kv_heads=4, head_dim=96, d_ff=3072,
+                           vocab_size=256, window=512, dtype="float32")
+        batch, seq = args.batch or 8, args.seq or 512
+    n = cfg.param_count()
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} params={n/1e6:.1f}M")
+
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    shape = InputShape("train_lm", seq, batch, "train")
+    oc = AdamWConfig(lr=6e-4, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 20, 1))
+    state, losses = train_loop(
+        cfg, shape, mesh, steps=args.steps, ckpt_dir=args.ckpt_dir,
+        resume=True, save_every=50, log_every=10, data="bytes", opt_cfg=oc)
+    print(f"done. loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(ckpts in {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

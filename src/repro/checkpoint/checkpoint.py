@@ -1,0 +1,102 @@
+"""Step-atomic checkpoints with reshard-on-restore.
+
+Layout:  <dir>/step_000123/  arrays.npz  meta.json
+Writes go to ``<dir>/.tmp_<step>`` and are *renamed* into place — a crash
+mid-write never corrupts the latest checkpoint (fault tolerance).  Keep-K
+GC deletes the oldest checkpoints after a successful save.
+
+Restore takes the *abstract* state tree plus target shardings and
+``jax.device_put``s each leaf — the saved mesh shape is irrelevant, so a
+run can resume on a *different* mesh (elastic re-scale after node loss).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flat(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, state, keep: int = 3,
+         extra_meta: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flat(state)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "n_arrays": len(arrays),
+            **(extra_meta or {})}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)           # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and os.path.exists(
+                       os.path.join(ckpt_dir, d, "meta.json")))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore(ckpt_dir: str, abstract_state, shardings=None,
+            step: Optional[int] = None):
+    """-> (state, meta).  `shardings` may target ANY mesh (reshard on
+    load); None restores host-local arrays."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    npz = np.load(os.path.join(d, "arrays.npz"))
+    flat_abs = _flat(abstract_state)
+    flat_sh = _flat(shardings) if shardings is not None else None
+
+    def build(path_key, leaf_abs):
+        arr = npz[path_key]
+        assert tuple(arr.shape) == tuple(leaf_abs.shape), (
+            path_key, arr.shape, leaf_abs.shape)
+        arr = arr.astype(leaf_abs.dtype)
+        if flat_sh is not None:
+            return jax.device_put(arr, flat_sh[path_key])
+        return jax.device_put(arr)
+
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(abstract_state)
+    rebuilt = []
+    for path, leaf in leaves_p:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        rebuilt.append(build(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, rebuilt), meta

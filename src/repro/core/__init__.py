@@ -1,0 +1,29 @@
+"""Jiagu's core: pre-decision scheduling + dual-staged scaling (the
+paper's contribution), the RFR predictor, the cluster simulator, and the
+K8s/Gsight/Owl baselines."""
+from .autoscaler import Autoscaler, ScalingConfig, ScalingMetrics
+from .capacity import QOS_MULT, QoSStore, capacity_of, update_capacity_table
+from .cluster import CapEntry, Cluster, FuncState, Node
+from .interference import GroundTruth, NodeResources
+from .predictor import (MODEL_ZOO, PerfPredictor, RandomForestRegressor,
+                        build_features)
+from .profiles import (BENCH_FUNCTIONS, FunctionSpec, ProfileStore,
+                       arch_functions, synthetic_functions)
+from .scheduler import (FAST_PATH_MS, REROUTE_MS, BaseScheduler,
+                        GsightScheduler, JiaguScheduler, K8sScheduler,
+                        OwlScheduler)
+from .simulator import SimConfig, SimResult, Simulation, generate_dataset
+from .traces import Trace, flip_trace, realworld_suite, realworld_trace, \
+    timer_trace
+
+__all__ = [
+    "Autoscaler", "ScalingConfig", "ScalingMetrics", "QOS_MULT", "QoSStore",
+    "capacity_of", "update_capacity_table", "CapEntry", "Cluster",
+    "FuncState", "Node", "GroundTruth", "NodeResources", "MODEL_ZOO",
+    "PerfPredictor", "RandomForestRegressor", "build_features",
+    "BENCH_FUNCTIONS", "FunctionSpec", "ProfileStore", "arch_functions",
+    "synthetic_functions", "FAST_PATH_MS", "REROUTE_MS", "BaseScheduler",
+    "GsightScheduler", "JiaguScheduler", "K8sScheduler", "OwlScheduler",
+    "SimConfig", "SimResult", "Simulation", "generate_dataset", "Trace",
+    "flip_trace", "realworld_suite", "realworld_trace", "timer_trace",
+]

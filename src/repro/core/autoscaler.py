@@ -1,0 +1,285 @@
+"""Autoscaling: traditional keep-alive vs Jiagu's dual-staged scaling
+(paper §5), plus on-demand migration of cached instances.
+
+Dual-staged timeline for a load drop (paper Fig. 10, defaults §6):
+    t=0       expected saturated count drops below current
+    t=release_s   "release": re-route, excess instances become *cached*
+    t=keepalive_s "real eviction": still-cached instances are destroyed
+A load rise first consumes cached instances via *logical cold starts*
+(re-route, <1 ms) and only then asks the scheduler for real cold starts.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+from .cluster import Cluster, Node
+from .scheduler import REROUTE_MS, BaseScheduler, JiaguScheduler
+
+DEFAULT_KEEPALIVE_S = 60.0
+
+
+@dataclass
+class ScalingConfig:
+    release_s: float = 45.0          # dual-staged release sensitivity
+    keepalive_s: float = DEFAULT_KEEPALIVE_S
+    init_ms: float = 8.4             # cfork container init; docker: 85.5
+    dual_staged: bool = True
+    migrate: bool = True             # on-demand migration of cached insts
+
+
+@dataclass
+class ScalingMetrics:
+    real_cold_starts: int = 0
+    logical_cold_starts: int = 0
+    blocked_logical: int = 0         # cached present but node full ->
+    #                                  would-be real cold start (paper
+    #                                  Fig 14-b "migrations needed")
+    migrations: int = 0
+    releases: int = 0
+    evictions: int = 0
+    cold_start_ms: List[float] = field(default_factory=list)
+
+    @property
+    def mean_cold_start_ms(self) -> float:
+        return (sum(self.cold_start_ms) / len(self.cold_start_ms)
+                if self.cold_start_ms else 0.0)
+
+
+class _CachedLedger:
+    """FIFO of released (cached) instances per function, for keep-alive
+    eviction accounting.  Entries: (release_time, node_id, count)."""
+
+    def __init__(self):
+        self.q: Dict[str, Deque[List]] = {}
+
+    def push(self, fn: str, t: float, node_id: int, k: int):
+        self.q.setdefault(fn, deque()).append([t, node_id, k])
+
+    def pop_newest(self, fn: str, node_id: int, k: int) -> int:
+        """Consume up to k cached instances of fn on node (newest first,
+        so the oldest keep aging toward eviction)."""
+        got = 0
+        dq = self.q.get(fn)
+        if not dq:
+            return 0
+        for entry in reversed(dq):
+            if k <= 0:
+                break
+            if entry[1] != node_id:
+                continue
+            take = min(k, entry[2])
+            entry[2] -= take
+            got += take
+            k -= take
+        self.q[fn] = deque(e for e in dq if e[2] > 0)
+        return got
+
+    def expired(self, fn: str, now: float, ttl: float
+                ) -> List[Tuple[int, int]]:
+        """Pop all entries older than ttl; returns [(node_id, count)]."""
+        dq = self.q.get(fn)
+        out: List[Tuple[int, int]] = []
+        if not dq:
+            return out
+        while dq and now - dq[0][0] >= ttl:
+            _, node_id, k = dq.popleft()
+            out.append((node_id, k))
+        return out
+
+    def move(self, fn: str, src: int, dst: int, k: int):
+        dq = self.q.get(fn)
+        if not dq:
+            return
+        splits = []
+        for entry in dq:
+            if k <= 0:
+                break
+            if entry[1] != src:
+                continue
+            take = min(k, entry[2])
+            if take == entry[2]:
+                entry[1] = dst
+            else:
+                entry[2] -= take
+                splits.append([entry[0], dst, take])
+            k -= take
+        dq.extend(splits)
+
+
+class Autoscaler:
+    def __init__(self, cluster: Cluster, scheduler: BaseScheduler,
+                 cfg: ScalingConfig):
+        self.cluster = cluster
+        self.scheduler = scheduler
+        self.cfg = cfg
+        self.metrics = ScalingMetrics()
+        self._below_since: Dict[str, Optional[float]] = {}
+        self._ledger = _CachedLedger()
+
+    # ------------------------------------------------------------------
+
+    def expected_instances(self, fn: str, rps: float) -> int:
+        spec = self.cluster.specs[fn]
+        if rps <= 1e-9:
+            return 0
+        return max(1, math.ceil(rps / spec.saturated_rps))
+
+    def tick(self, now: float, rps: Dict[str, float]):
+        for fn in self.cluster.specs:
+            self._tick_fn(now, fn, rps.get(fn, 0.0))
+        if self.cfg.dual_staged and self.cfg.migrate:
+            self._migrate(now)
+        self.cluster.reap_empty()
+
+    # ------------------------------------------------------------------
+
+    def _scale_up(self, now: float, fn: str, need: int):
+        if self.cfg.dual_staged:
+            picks = self.scheduler.pick_logical_start_nodes(fn, need) \
+                if isinstance(self.scheduler, JiaguScheduler) else []
+            for node, k in picks:
+                got = node.logical_start(fn, k)
+                self._ledger.pop_newest(fn, node.id, got)
+                self.metrics.logical_cold_starts += got
+                self.metrics.cold_start_ms.extend([REROUTE_MS] * got)
+                need -= got
+                self.scheduler.notify_change(node, now)
+            if need > 0 and self.cluster.cached_count(fn) > 0:
+                # cached instances exist but their nodes are full: these
+                # conversions would have been real cold starts; migration
+                # exists to prevent this state (paper Fig 14-b).
+                self.metrics.blocked_logical += min(
+                    need, self.cluster.cached_count(fn))
+        if need > 0:
+            placements = self.scheduler.schedule(fn, need, now)
+            placed = sum(p.count for p in placements)
+            self.metrics.real_cold_starts += placed
+            for p in placements:
+                self.metrics.cold_start_ms.extend(
+                    [p.latency_ms + self.cfg.init_ms] * p.count)
+
+    def _scale_down_dual(self, now: float, fn: str, expected: int,
+                         n_sat: int):
+        since = self._below_since.get(fn)
+        if since is None:
+            self._below_since[fn] = now
+            return
+        if now - since < self.cfg.release_s:
+            return
+        excess = n_sat - expected
+        for node, k in self.scheduler.pick_release_nodes(fn, excess) \
+                if isinstance(self.scheduler, JiaguScheduler) else \
+                self._default_release_picks(fn, excess):
+            got = node.release(fn, k)
+            self._ledger.push(fn, now, node.id, got)
+            self.metrics.releases += got
+            self.scheduler.notify_change(node, now)
+        self._below_since[fn] = now  # re-arm for further drops
+
+    def _default_release_picks(self, fn: str, k: int):
+        picks = []
+        for node in sorted(self.cluster.nodes_with(fn),
+                           key=lambda n: n.n_instances()):
+            if k <= 0:
+                break
+            take = min(k, node.funcs[fn].n_sat)
+            if take > 0:
+                picks.append((node, take))
+                k -= take
+        return picks
+
+    def _scale_down_traditional(self, now: float, fn: str, expected: int,
+                                n_sat: int):
+        since = self._below_since.get(fn)
+        if since is None:
+            self._below_since[fn] = now
+            return
+        if now - since < self.cfg.keepalive_s:
+            return
+        excess = n_sat - expected
+        for node, k in self._default_release_picks(fn, excess):
+            got = node.evict_sat(fn, k)
+            self.metrics.evictions += got
+            self.scheduler.notify_change(node, now)
+        self._below_since[fn] = now
+
+    def _tick_fn(self, now: float, fn: str, rps: float):
+        expected = self.expected_instances(fn, rps)
+        n_sat = self.cluster.sat_count(fn)
+
+        if expected > n_sat:
+            self._below_since[fn] = None
+            self._scale_up(now, fn, expected - n_sat)
+        elif expected < n_sat:
+            if self.cfg.dual_staged:
+                self._scale_down_dual(now, fn, expected, n_sat)
+            else:
+                self._scale_down_traditional(now, fn, expected, n_sat)
+        else:
+            self._below_since[fn] = None
+
+        # keep-alive eviction of cached instances (dual-staged only)
+        if self.cfg.dual_staged:
+            ttl = self.cfg.keepalive_s - self.cfg.release_s
+            for node_id, k in self._ledger.expired(fn, now, ttl):
+                node = self.cluster.nodes.get(node_id)
+                if node is None:
+                    continue
+                got = node.evict_cached(fn, k)
+                self.metrics.evictions += got
+                if got:
+                    self.scheduler.notify_change(node, now)
+
+    # -- on-demand migration (paper §5) ---------------------------------
+
+    def _migrate(self, now: float):
+        """Move cached instances off nodes where they could no longer be
+        re-saturated (n_sat + n_cached > capacity), hiding the real cold
+        start they would otherwise cost.  Additionally *consolidates*:
+        a node left with only cached instances migrates them to busy
+        nodes with headroom so the empty server can be returned (paper
+        §6: "an empty server will be evicted to optimize costs" — cached
+        instances must not pin otherwise-idle machines)."""
+        for node in list(self.cluster.nodes.values()):
+            all_cached = all(s.n_sat == 0 for s in node.funcs.values()) \
+                and node.n_instances() > 0
+            for fn, st in list(node.funcs.items()):
+                entry = node.table.get(fn)
+                if st.n_cached == 0:
+                    continue
+                if all_cached:
+                    k = st.n_cached
+                elif entry is not None:
+                    excess = st.n_sat + st.n_cached - entry.capacity
+                    if excess <= 0:
+                        continue
+                    k = min(excess, st.n_cached)
+                else:
+                    continue
+                target = self._find_migration_target(fn, node, k)
+                if target is None:
+                    continue
+                node.evict_cached(fn, k)
+                target.state(fn).n_cached += k
+                self._ledger.move(fn, node.id, target.id, k)
+                self.metrics.migrations += k
+                self.scheduler.notify_change(node, now)
+                self.scheduler.notify_change(target, now)
+
+    def _find_migration_target(self, fn: str, src: Node, k: int
+                               ) -> Optional[Node]:
+        for node in sorted(self.cluster.nodes_with(fn),
+                           key=lambda n: -n.funcs[fn].n_sat):
+            if node.id == src.id:
+                continue
+            entry = node.table.get(fn)
+            if entry is None:
+                continue
+            st = node.funcs[fn]
+            if (entry.capacity - st.n_sat - st.n_cached >= k
+                    and self.cluster.mem_headroom(node, fn) >= k):
+                return node
+        return None

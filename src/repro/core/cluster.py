@@ -1,0 +1,157 @@
+"""Cluster state: nodes, per-node function instance counts, capacity tables.
+
+Counts, not instance objects: the paper's operations (deploy, release,
+logical cold start, migrate, evict) are all count transitions on a
+(node, function) pair; instance identity never matters.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, Optional, Tuple
+
+from .interference import NodeResources
+from .profiles import FunctionSpec
+
+
+@dataclass
+class FuncState:
+    n_sat: int = 0
+    n_cached: int = 0
+    # timestamps for keep-alive bookkeeping (newest-first not needed; the
+    # autoscaler tracks per-function timers cluster-wide)
+
+    @property
+    def total(self) -> int:
+        return self.n_sat + self.n_cached
+
+
+@dataclass
+class CapEntry:
+    capacity: int          # max saturated instances of fn on this node
+    fresh: bool = True     # False once a *different* function arrived
+
+
+class Node:
+    _ids = itertools.count()
+
+    def __init__(self, res: NodeResources):
+        self.id = next(Node._ids)
+        self.res = res
+        self.funcs: Dict[str, FuncState] = {}
+        self.table: Dict[str, CapEntry] = {}
+        self.update_pending_until: float = -1.0
+
+    # -- state access ----------------------------------------------------
+
+    def state(self, fn: str) -> FuncState:
+        return self.funcs.setdefault(fn, FuncState())
+
+    def colocation(self, specs: Dict[str, FunctionSpec]
+                   ) -> Dict[str, Tuple[FunctionSpec, float, float]]:
+        return {n: (specs[n], s.n_sat, s.n_cached)
+                for n, s in self.funcs.items() if s.total > 0}
+
+    def n_instances(self) -> int:
+        return sum(s.total for s in self.funcs.values())
+
+    def mem_used(self, specs: Dict[str, FunctionSpec]) -> float:
+        return sum(specs[n].mem_req * s.total for n, s in self.funcs.items())
+
+    def cpu_requested(self, specs: Dict[str, FunctionSpec]) -> float:
+        return sum(specs[n].cpu_req * s.total for n, s in self.funcs.items())
+
+    def is_empty(self) -> bool:
+        return self.n_instances() == 0
+
+    # -- mutations (keep table freshness in sync) -------------------------
+
+    def deploy(self, fn: str, k: int = 1):
+        self.state(fn).n_sat += k
+        for g, e in self.table.items():
+            if g != fn:
+                e.fresh = False  # their capacity assumed the old count of fn
+
+    def release(self, fn: str, k: int = 1):
+        s = self.state(fn)
+        k = min(k, s.n_sat)
+        s.n_sat -= k
+        s.n_cached += k
+        # capacities can only have grown -> stale values remain safe
+        return k
+
+    def logical_start(self, fn: str, k: int = 1) -> int:
+        s = self.state(fn)
+        k = min(k, s.n_cached)
+        s.n_cached -= k
+        s.n_sat += k
+        for g, e in self.table.items():
+            if g != fn:
+                e.fresh = False
+        return k
+
+    def evict_cached(self, fn: str, k: int = 1) -> int:
+        s = self.state(fn)
+        k = min(k, s.n_cached)
+        s.n_cached -= k
+        if s.total == 0:
+            self.funcs.pop(fn, None)
+            self.table.pop(fn, None)
+        return k
+
+    def evict_sat(self, fn: str, k: int = 1) -> int:
+        s = self.state(fn)
+        k = min(k, s.n_sat)
+        s.n_sat -= k
+        if s.total == 0:
+            self.funcs.pop(fn, None)
+            self.table.pop(fn, None)
+        return k
+
+
+class Cluster:
+    """Elastic node pool (paper §6: new server requested when no node fits;
+    empty servers are returned)."""
+
+    def __init__(self, specs: Dict[str, FunctionSpec],
+                 res: Optional[NodeResources] = None,
+                 max_nodes: int = 1000):
+        self.specs = specs
+        self.res = res or NodeResources()
+        self.nodes: Dict[int, Node] = {}
+        self.max_nodes = max_nodes
+        self.nodes_added = 0
+
+    def add_node(self) -> Node:
+        node = Node(self.res)
+        self.nodes[node.id] = node
+        self.nodes_added += 1
+        return node
+
+    def reap_empty(self) -> int:
+        dead = [nid for nid, n in self.nodes.items() if n.is_empty()]
+        for nid in dead:
+            del self.nodes[nid]
+        return len(dead)
+
+    def nodes_with(self, fn: str) -> Iterator[Node]:
+        for n in self.nodes.values():
+            if fn in n.funcs and n.funcs[fn].total > 0:
+                yield n
+
+    def total_instances(self) -> int:
+        return sum(n.n_instances() for n in self.nodes.values())
+
+    def sat_count(self, fn: str) -> int:
+        return sum(n.funcs[fn].n_sat for n in self.nodes.values()
+                   if fn in n.funcs)
+
+    def cached_count(self, fn: str) -> int:
+        return sum(n.funcs[fn].n_cached for n in self.nodes.values()
+                   if fn in n.funcs)
+
+    def mem_headroom(self, node: Node, fn: str) -> int:
+        """How many more instances of fn fit in (non-overcommitted) memory."""
+        spec = self.specs[fn]
+        free = node.res.mem_mb - node.mem_used(self.specs)
+        return max(0, int(free // spec.mem_req))

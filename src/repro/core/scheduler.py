@@ -1,0 +1,476 @@
+"""Schedulers: Jiagu pre-decision scheduling + the three baselines
+(Kubernetes, Gsight-style, Owl-style) from the paper's evaluation.
+
+Scheduling-cost accounting is *measured*, not assumed: every slow-path /
+per-schedule inference is a real call into the RFR predictor and its wall
+time is what lands in the metrics.  Fast-path decisions cost a table
+lookup (FAST_PATH_MS).  Asynchronous capacity-table updates run real
+inference too, but their time is billed to background work, never to the
+scheduling critical path — the paper's core claim.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .capacity import M_MAX_DEFAULT, QoSStore, capacity_of, \
+    update_capacity_table
+from .cluster import CapEntry, Cluster, Node
+from .predictor import PerfPredictor, build_features
+from .profiles import FunctionSpec, ProfileStore
+
+FAST_PATH_MS = 0.05     # capacity-table lookup + comparison
+REROUTE_MS = 0.5        # logical cold start: K8s Service label flip
+
+
+@dataclass
+class SchedMetrics:
+    decisions: int = 0
+    instances_placed: int = 0
+    fast: int = 0
+    slow: int = 0
+    failed: int = 0
+    sched_time_ms: float = 0.0
+    sched_latencies: List[float] = field(default_factory=list)
+    critical_inference_rows: int = 0
+    critical_inference_calls: int = 0
+    async_inference_rows: int = 0
+    async_updates: int = 0
+
+    @property
+    def mean_latency_ms(self) -> float:
+        return (sum(self.sched_latencies) / len(self.sched_latencies)
+                if self.sched_latencies else 0.0)
+
+
+@dataclass
+class Placement:
+    node_id: int
+    count: int
+    latency_ms: float      # scheduling latency experienced by this decision
+
+
+class BaseScheduler:
+    name = "base"
+
+    def __init__(self, cluster: Cluster, store: ProfileStore,
+                 qos: QoSStore):
+        self.cluster = cluster
+        self.store = store
+        self.qos = qos
+        self.metrics = SchedMetrics()
+
+    # -- interface ---------------------------------------------------------
+
+    def schedule(self, fn: str, count: int, now: float) -> List[Placement]:
+        raise NotImplementedError
+
+    def on_tick(self, now: float):
+        pass
+
+    def notify_change(self, node: Node, now: float):
+        """Called when counts change outside scheduling (release/evict)."""
+        pass
+
+    def observe(self, node: Node, ok: bool, now: float):
+        """Runtime QoS observation feedback (used by Owl)."""
+        pass
+
+    # -- shared helpers ------------------------------------------------
+
+    def _new_node(self) -> Node:
+        return self.cluster.add_node()
+
+    def _mem_room(self, node: Node, fn: str) -> int:
+        return self.cluster.mem_headroom(node, fn)
+
+
+# ---------------------------------------------------------------------------
+# Kubernetes baseline: requested-resource bin packing, no overcommitment
+# ---------------------------------------------------------------------------
+
+
+class K8sScheduler(BaseScheduler):
+    name = "k8s"
+
+    def _fits(self, node: Node, spec: FunctionSpec) -> bool:
+        return (node.cpu_requested(self.cluster.specs) + spec.cpu_req
+                <= node.res.cpu_mcores
+                and node.mem_used(self.cluster.specs) + spec.mem_req
+                <= node.res.mem_mb)
+
+    def schedule(self, fn: str, count: int, now: float) -> List[Placement]:
+        spec = self.cluster.specs[fn]
+        out: List[Placement] = []
+        for _ in range(count):
+            target = None
+            # most-allocated first (default kube-scheduler bin-packing-ish)
+            for node in sorted(self.cluster.nodes.values(),
+                               key=lambda n: -n.cpu_requested(
+                                   self.cluster.specs)):
+                if self._fits(node, spec):
+                    target = node
+                    break
+            if target is None:
+                target = self._new_node()
+            target.deploy(fn, 1)
+            out.append(Placement(target.id, 1, FAST_PATH_MS))
+            self.metrics.decisions += 1
+            self.metrics.instances_placed += 1
+            self.metrics.fast += 1
+            self.metrics.sched_latencies.append(FAST_PATH_MS)
+            self.metrics.sched_time_ms += FAST_PATH_MS
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Jiagu: pre-decision scheduling (fast/slow path + async update + batching)
+# ---------------------------------------------------------------------------
+
+
+class JiaguScheduler(BaseScheduler):
+    name = "jiagu"
+
+    def __init__(self, cluster: Cluster, store: ProfileStore, qos: QoSStore,
+                 predictor: PerfPredictor, m_max: int = M_MAX_DEFAULT):
+        super().__init__(cluster, store, qos)
+        self.predictor = predictor
+        self.m_max = m_max
+        self._pending: Dict[int, float] = {}  # node id -> due time
+
+    # -- async update machinery -----------------------------------------
+
+    def _queue_update(self, node: Node, now: float):
+        est = max(self.predictor.mean_inference_ms, 0.5) / 1e3
+        due = now + est
+        self._pending[node.id] = max(self._pending.get(node.id, 0.0), due)
+        node.update_pending_until = self._pending[node.id]
+
+    def on_tick(self, now: float):
+        due = [nid for nid, t in self._pending.items() if t <= now]
+        for nid in due:
+            self._pending.pop(nid)
+            node = self.cluster.nodes.get(nid)
+            if node is None:
+                continue
+            rows = update_capacity_table(self.predictor, self.store,
+                                         self.qos, self.cluster.specs, node,
+                                         self.m_max)
+            node.update_pending_until = -1.0
+            self.metrics.async_inference_rows += rows
+            self.metrics.async_updates += 1
+
+    def notify_change(self, node: Node, now: float):
+        # releases/evictions only increase capacities; queue a background
+        # refresh so the scheduler can reuse the space (paper §5).
+        self._queue_update(node, now)
+
+    # -- scheduling -------------------------------------------------------
+
+    def _coloc_counts(self, node: Node) -> Dict[str, Tuple[float, float]]:
+        return {g: (float(s.n_sat), float(s.n_cached))
+                for g, s in node.funcs.items() if s.total > 0}
+
+    def _slow_capacity(self, node: Node, fn: str,
+                       need: int) -> Tuple[int, float]:
+        """Compute capacity on the critical path; returns (cap, ms).
+
+        The sweep is capped at what THIS decision needs (current + need):
+        the decision only requires knowing whether `need` more instances
+        fit, and the asynchronous update queued by the deployment rebuilds
+        the full-depth entry off the critical path — so the slow path
+        pays O(need) inference rows, not O(m_max)."""
+        t0 = time.perf_counter()
+        st = node.funcs.get(fn)
+        have = st.total if st is not None else 0
+        m_cap = min(self.m_max, have + need + 1)
+        cap, rows = capacity_of(self.predictor, self.store, self.qos,
+                                self.cluster.specs, self._coloc_counts(node),
+                                fn, m_cap)
+        ms = (time.perf_counter() - t0) * 1e3
+        node.table[fn] = CapEntry(capacity=cap, fresh=cap < m_cap)
+        self.metrics.critical_inference_rows += rows
+        self.metrics.critical_inference_calls += 1
+        return cap, ms
+
+    def schedule(self, fn: str, count: int, now: float) -> List[Placement]:
+        """Concurrency-aware: `count` co-arriving instances of one function
+        are one batched decision wherever capacity allows."""
+        out: List[Placement] = []
+        remaining = count
+        decision_ms = 0.0
+        used_slow = False
+
+        def place(node: Node, k: int, ms: float):
+            nonlocal remaining
+            node.deploy(fn, k)
+            out.append(Placement(node.id, k, ms))
+            remaining -= k
+            self.metrics.instances_placed += k
+            self._queue_update(node, now + ms / 1e3)
+
+        # 1) fast path: nodes already running fn with a fresh entry
+        for node in sorted(self.cluster.nodes_with(fn),
+                           key=lambda n: -n.funcs[fn].n_sat):
+            if remaining <= 0:
+                break
+            entry = node.table.get(fn)
+            if entry is None or not entry.fresh:
+                continue
+            st = node.funcs[fn]
+            room = min(entry.capacity - st.n_sat - st.n_cached,
+                       self._mem_room(node, fn))
+            if room <= 0:
+                continue
+            k = min(remaining, room)
+            decision_ms += FAST_PATH_MS
+            place(node, k, decision_ms)
+            self.metrics.fast += 1
+
+        # 2) slow path: stale entries on fn's nodes, then other nodes
+        if remaining > 0:
+            cands = [n for n in self.cluster.nodes_with(fn)
+                     if n.table.get(fn) is None or not n.table[fn].fresh]
+            others = sorted(
+                (n for n in self.cluster.nodes.values()
+                 if fn not in n.funcs or n.funcs[fn].total == 0),
+                key=lambda n: -n.n_instances())
+            for node in cands + others:
+                if remaining <= 0:
+                    break
+                if self._mem_room(node, fn) <= 0:
+                    continue
+                cap, ms = self._slow_capacity(node, fn, remaining)
+                decision_ms += ms
+                used_slow = True
+                st = node.state(fn)
+                room = min(cap - st.n_sat - st.n_cached,
+                           self._mem_room(node, fn))
+                if room <= 0:
+                    continue
+                k = min(remaining, room)
+                place(node, k, decision_ms)
+                self.metrics.slow += 1
+
+        # 3) cluster scale-out: fresh empty node
+        while remaining > 0:
+            node = self._new_node()
+            cap, ms = self._slow_capacity(node, fn, remaining)
+            decision_ms += ms
+            used_slow = True
+            self.metrics.slow += 1
+            room = min(max(cap, 1), self._mem_room(node, fn))
+            if room <= 0:
+                self.metrics.failed += remaining
+                break
+            place(node, min(remaining, room), decision_ms)
+
+        self.metrics.decisions += 1
+        self.metrics.sched_latencies.append(decision_ms)
+        self.metrics.sched_time_ms += decision_ms
+        return out
+
+    # -- dual-staged scaling hooks (used by the autoscaler) ---------------
+
+    def pick_release_nodes(self, fn: str, k: int) -> List[Tuple[Node, int]]:
+        """Choose which instances to drain: least-loaded nodes first so
+        released capacity concentrates."""
+        picks = []
+        nodes = sorted((n for n in self.cluster.nodes_with(fn)
+                        if n.funcs[fn].n_sat > 0),
+                       key=lambda n: n.n_instances())
+        for node in nodes:
+            if k <= 0:
+                break
+            take = min(k, node.funcs[fn].n_sat)
+            picks.append((node, take))
+            k -= take
+        return picks
+
+    def pick_logical_start_nodes(self, fn: str, k: int
+                                 ) -> List[Tuple[Node, int]]:
+        """Choose cached instances to re-saturate; only where the capacity
+        table says the node can absorb them."""
+        picks = []
+        nodes = sorted((n for n in self.cluster.nodes_with(fn)
+                        if n.funcs[fn].n_cached > 0),
+                       key=lambda n: -n.funcs[fn].n_cached)
+        for node in nodes:
+            if k <= 0:
+                break
+            st = node.funcs[fn]
+            entry = node.table.get(fn)
+            cap = entry.capacity if entry else st.n_sat + st.n_cached
+            absorb = min(st.n_cached, max(cap - st.n_sat, 0))
+            if absorb <= 0:
+                continue
+            take = min(k, absorb)
+            picks.append((node, take))
+            k -= take
+        return picks
+
+
+# ---------------------------------------------------------------------------
+# Gsight-style: accurate model, inference on every scheduling decision
+# ---------------------------------------------------------------------------
+
+
+class GsightScheduler(BaseScheduler):
+    """Same predictor quality as Jiagu but coupled prediction/decision:
+    every instance triggers per-candidate-node inference on the critical
+    path, with per-instance-granularity inputs (higher row counts)."""
+
+    name = "gsight"
+
+    def __init__(self, cluster: Cluster, store: ProfileStore, qos: QoSStore,
+                 predictor: PerfPredictor, max_candidates: int = 4):
+        super().__init__(cluster, store, qos)
+        self.predictor = predictor
+        self.max_candidates = max_candidates
+
+    def _check_node(self, node: Node, fn: str) -> Tuple[bool, float]:
+        """Predict everyone's latency with one more fn instance; per-
+        instance granularity: one row per *instance* (not per function)."""
+        specs = self.cluster.specs
+        coloc = {g: (float(s.n_sat), float(s.n_cached))
+                 for g, s in node.funcs.items() if s.total > 0}
+        coloc[fn] = (coloc.get(fn, (0.0, 0.0))[0] + 1,
+                     coloc.get(fn, (0.0, 0.0))[1])
+        rows, bounds = [], []
+        for g, (ns, nc) in coloc.items():
+            gspec = specs[g]
+            neigh = [(self.store.profile(specs[h]), hs, hc)
+                     for h, (hs, hc) in coloc.items() if h != g]
+            row = build_features(self.qos.solo(gspec),
+                                 self.store.profile(gspec), ns, nc, neigh)
+            for _ in range(int(ns) or 1):  # instance granularity
+                rows.append(row)
+                bounds.append(self.qos.qos(gspec))
+        t0 = time.perf_counter()
+        pred = self.predictor.predict(np.stack(rows))
+        ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.critical_inference_rows += len(rows)
+        self.metrics.critical_inference_calls += 1
+        return bool((pred <= np.asarray(bounds)).all()), ms
+
+    def schedule(self, fn: str, count: int, now: float) -> List[Placement]:
+        out: List[Placement] = []
+        for _ in range(count):
+            decision_ms = 0.0
+            placed = False
+            cands = sorted(self.cluster.nodes.values(),
+                           key=lambda n: (fn not in n.funcs,
+                                          -n.n_instances()))
+            for node in cands[: self.max_candidates]:
+                if self._mem_room(node, fn) <= 0:
+                    continue
+                ok, ms = self._check_node(node, fn)
+                decision_ms += ms
+                self.metrics.slow += 1
+                if ok:
+                    node.deploy(fn, 1)
+                    out.append(Placement(node.id, 1, decision_ms))
+                    placed = True
+                    break
+            if not placed:
+                node = self._new_node()
+                ok, ms = self._check_node(node, fn)
+                decision_ms += ms
+                self.metrics.slow += 1
+                node.deploy(fn, 1)
+                out.append(Placement(node.id, 1, decision_ms))
+            self.metrics.decisions += 1
+            self.metrics.instances_placed += 1
+            self.metrics.sched_latencies.append(decision_ms)
+            self.metrics.sched_time_ms += decision_ms
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Owl-style: historical colocation table, at most two functions per node
+# ---------------------------------------------------------------------------
+
+
+class OwlScheduler(BaseScheduler):
+    """Historical-information scheduler: colocation combos it has *seen*
+    behave well are reused; unknown combos fall back to requested-resource
+    packing.  Only two distinct functions may share a node (the paper's
+    stated limitation -> lower density)."""
+
+    name = "owl"
+
+    def __init__(self, cluster: Cluster, store: ProfileStore, qos: QoSStore):
+        super().__init__(cluster, store, qos)
+        self.safe: set = set()     # {(fa, na, fb, nb)} observed-safe
+        self.unsafe: set = set()
+        self.profiled_combos = 0   # O(n^2 k) profiling-cost counter
+
+    @staticmethod
+    def _key(coloc: Dict[str, int]) -> tuple:
+        items = sorted(coloc.items())
+        return tuple(x for kv in items for x in kv)
+
+    def _combo_after(self, node: Node, fn: str) -> Dict[str, int]:
+        c = {g: s.total for g, s in node.funcs.items() if s.total > 0}
+        c[fn] = c.get(fn, 0) + 1
+        return c
+
+    def _fits_requested(self, node: Node, spec: FunctionSpec) -> bool:
+        return (node.cpu_requested(self.cluster.specs) + spec.cpu_req
+                <= node.res.cpu_mcores
+                and node.mem_used(self.cluster.specs) + spec.mem_req
+                <= node.res.mem_mb)
+
+    def schedule(self, fn: str, count: int, now: float) -> List[Placement]:
+        spec = self.cluster.specs[fn]
+        out: List[Placement] = []
+        for _ in range(count):
+            target = None
+            # 1) known-safe overcommitted combos
+            for node in sorted(self.cluster.nodes.values(),
+                               key=lambda n: -n.n_instances()):
+                combo = self._combo_after(node, fn)
+                if len(combo) > 2 or self._mem_room(node, fn) <= 0:
+                    continue
+                key = self._key(combo)
+                if key in self.safe and key not in self.unsafe:
+                    target = node
+                    break
+            # 2) exploration within requested resources
+            if target is None:
+                for node in sorted(self.cluster.nodes.values(),
+                                   key=lambda n: -n.n_instances()):
+                    combo = self._combo_after(node, fn)
+                    if len(combo) > 2:
+                        continue
+                    if self._key(combo) in self.unsafe:
+                        continue
+                    if self._fits_requested(node, spec):
+                        target = node
+                        break
+            if target is None:
+                target = self._new_node()
+            target.deploy(fn, 1)
+            out.append(Placement(target.id, 1, FAST_PATH_MS))
+            self.metrics.decisions += 1
+            self.metrics.instances_placed += 1
+            self.metrics.fast += 1
+            self.metrics.sched_latencies.append(FAST_PATH_MS)
+            self.metrics.sched_time_ms += FAST_PATH_MS
+        return out
+
+    def observe(self, node: Node, ok: bool, now: float):
+        combo = {g: s.total for g, s in node.funcs.items() if s.total > 0}
+        if not combo or len(combo) > 2:
+            return
+        key = self._key(combo)
+        if key not in self.safe and key not in self.unsafe:
+            self.profiled_combos += 1
+        if ok:
+            self.safe.add(key)
+        else:
+            self.unsafe.add(key)
+            self.safe.discard(key)

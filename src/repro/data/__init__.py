@@ -1,0 +1,3 @@
+from .pipeline import ByteCorpus, TokenPipeline
+
+__all__ = ["ByteCorpus", "TokenPipeline"]

@@ -1,0 +1,14 @@
+"""Multi-pod distribution: sharding rules, distributed step builders,
+gradient compression, and fault-tolerance machinery."""
+from .sharding import (batch_pspecs, cache_shardings, logical_rules,
+                       param_shardings, pspec_for_param)
+from .steps import (TrainState, abstract_cache, abstract_params,
+                    abstract_train_state, input_specs, make_decode_step,
+                    make_prefill_step, make_train_step)
+
+__all__ = [
+    "batch_pspecs", "cache_shardings", "logical_rules", "param_shardings",
+    "pspec_for_param", "TrainState", "abstract_cache", "abstract_params",
+    "abstract_train_state", "input_specs", "make_decode_step",
+    "make_prefill_step", "make_train_step",
+]

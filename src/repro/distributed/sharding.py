@@ -1,0 +1,262 @@
+"""Sharding rules: logical axes -> mesh axes, with divisibility fallback.
+
+Scheme (Megatron/FSDP hybrid, per DESIGN.md §5):
+  * "model" mesh axis:  tensor parallelism — attention heads, FFN hidden,
+    vocab, MoE experts (expert parallelism), SSM/LRU inner width.
+  * "data" mesh axis:   FSDP — parameters (and Adam moments, which are
+    congruent trees) additionally sharded on a non-TP dimension; gathered
+    on use, gradients reduce-scattered by GSPMD automatically.
+  * "pod"  mesh axis:   pure data parallelism across pods — batch only.
+    Parameters are NOT sharded across pods (cross-pod all-gathers every
+    step would ride the slow DCI links); each pod holds a full FSDP'd
+    copy and gradients all-reduce across pods once per step.
+
+Every rule is sanitized: a mesh axis is dropped (dimension replicated)
+whenever it does not evenly divide the dimension — e.g. gemma2's 8 query
+heads on a 16-way model axis fall back to replicated attention weights
+while its 9216 FFN still gets 16-way TP.  The fallback keeps every
+(arch x shape x mesh) cell compilable; the waste it introduces is visible
+in the roofline's MODEL_FLOPS/HLO_FLOPS ratio and is hillclimbed in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch-parallel axes: ("pod", "data") when the pod axis exists."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# ---------------------------------------------------------------------------
+# Logical axes -> mesh axes
+# ---------------------------------------------------------------------------
+
+# logical axis name -> mesh axes (None = replicated)
+LOGICAL_TO_MESH = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tensor": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "seq": ("data",),       # sequence parallelism (long-context decode)
+    None: None,
+}
+
+
+def logical_rules() -> dict:
+    return dict(LOGICAL_TO_MESH)
+
+
+# (path regex, logical axes per dim).  First match wins; matched against
+# the "/"-joined param path with the stacked-period axis already stripped.
+_PARAM_RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    # embeddings: vocab-parallel (Megatron)
+    (r"(embed|lm_head)$", ("vocab", None)),
+    (r"frontend_proj$", ("fsdp", None)),
+    # MLA (must precede generic attention: names overlap)
+    (r"mla/w_dq$", ("fsdp", "tensor")),
+    (r"mla/w_uq$", ("fsdp", "heads", None)),
+    (r"mla/w_dkv$", ("fsdp", None)),
+    (r"mla/w_ukv$", ("fsdp", "heads", None)),
+    (r"mla/w_o$", ("heads", None, "fsdp")),
+    # attention
+    (r"attn/w_q$", ("fsdp", "heads", None)),
+    (r"attn/w_[kv]$", ("fsdp", "kv_heads", None)),
+    (r"attn/w_o$", ("heads", None, "fsdp")),
+    (r"attn/b_q$", ("heads", None)),
+    (r"attn/b_[kv]$", ("kv_heads", None)),
+    # MoE experts: expert-parallel + FSDP
+    (r"moe/w_router$", (None, None)),
+    (r"moe/(w_gate|w_up)$", ("expert", "fsdp", None)),
+    (r"moe/w_down$", ("expert", None, "fsdp")),
+    (r"moe/shared/(w_gate|w_up)$", ("fsdp", "tensor")),
+    (r"moe/shared/w_down$", ("tensor", "fsdp")),
+    # dense MLP
+    (r"mlp/(w_gate|w_up)$", ("fsdp", "tensor")),
+    (r"mlp/w_down$", ("tensor", "fsdp")),
+    # RG-LRU
+    (r"rglru/(w_x|w_gate_branch)$", ("fsdp", "tensor")),
+    (r"rglru/w_out$", ("tensor", "fsdp")),
+    (r"rglru/conv_w$", (None, "tensor")),
+    (r"rglru/(w_r|w_i)$", (None, None, None)),
+    (r"rglru/a_param$", ("tensor",)),
+    # Mamba-2 SSD
+    (r"ssd/w_in$", ("fsdp", None)),
+    (r"ssd/w_out$", ("tensor", "fsdp")),
+    (r"ssd/conv_w$", (None, None)),
+    # everything else (norm scales, small biases, A_log, D, dt_bias...)
+    (r".", None),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _sanitize(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that don't divide their dimension; drop axes not in
+    the mesh (e.g. "pod" on the single-pod mesh)."""
+    out = []
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if axes and dim % axis_size(mesh, axes) == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def pspec_for_param(path, leaf, mesh: Mesh,
+                    rules=None) -> P:
+    """PartitionSpec for one param leaf (body-stacked period axis aware)."""
+    ps = _path_str(path)
+    shape = tuple(leaf.shape)
+    stacked = bool(re.search(r"(^|/)body/", ps))
+    eff_shape = shape[1:] if stacked else shape
+    table = rules or LOGICAL_TO_MESH
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, ps):
+            if logical is None:
+                spec = (None,) * len(eff_shape)
+            else:
+                assert len(logical) == len(eff_shape), (ps, logical,
+                                                        eff_shape)
+                spec = tuple(table.get(ax) for ax in logical)
+            break
+    sane = _sanitize(spec, eff_shape, mesh)
+    if stacked:
+        sane = P(None, *sane)
+    return sane
+
+
+def param_shardings(params_or_shapes, mesh: Mesh, rules=None):
+    """Tree of NamedSharding congruent with the params tree (works for
+    concrete arrays or ShapeDtypeStructs — also used for Adam moments)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, pspec_for_param(path, leaf, mesh, rules)),
+        params_or_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def _dp_or_none(mesh: Mesh, b: int):
+    dp = dp_axes(mesh)
+    if dp and b % axis_size(mesh, dp) == 0:
+        return dp if len(dp) > 1 else dp[0]
+    return None
+
+
+def batch_pspecs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> dict:
+    """PartitionSpecs for the input batch dict of this (arch, shape)."""
+    b = shape.global_batch
+    dp = _dp_or_none(mesh, b)
+    if shape.kind == "decode":
+        specs = {"tokens": P(dp), "pos": P(dp)}
+        return specs
+    specs = {}
+    if cfg.frontend == "audio":
+        specs["frames"] = P(dp, None, None)
+    elif cfg.frontend == "vision":
+        specs["patch_embeds"] = P(dp, None, None)
+        specs["tokens"] = P(dp, None)
+    else:
+        specs["tokens"] = P(dp, None)
+    if shape.kind == "train":
+        specs["targets"] = P(dp, None)
+    return specs
+
+
+def cache_pspec_for(path, leaf, cfg: ModelConfig, mesh: Mesh,
+                    batch: int, l_model: bool = False) -> P:
+    """Spec for one KV/state cache leaf.
+
+    Layouts: attention k/v (B, L, Hkv, D); MLA c_kv (B, L, r) and k_rope
+    (B, L, dr); rglru h (B, W), conv (B, w-1, W); ssd h (B, H, P, N),
+    conv (B, w-1, C).  Body caches carry a leading period axis.
+    If the batch is shardable it goes on the DP axes; otherwise (long-
+    context, batch=1) the cache *sequence* dim is sharded on "data" —
+    sequence parallelism for decode.
+    """
+    ps = _path_str(path)
+    stacked = bool(re.search(r"(^|/)body/", ps))
+    shape = tuple(leaf.shape)[1:] if stacked else tuple(leaf.shape)
+    dp = _dp_or_none(mesh, batch)
+    name = ps.rsplit("/", 1)[-1]
+    seq_shard = dp is None  # batch not shardable -> shard sequence instead
+    # l_model: shard the cache length dim on the (otherwise attention-idle)
+    # "model" axis — flash-decoding style; partial softmax stats reduce
+    # over "model" with tiny (B, H) all-reduces.
+    l_ax = "model" if l_model else ("data" if seq_shard else None)
+
+    if name in ("k", "v"):                       # (B, L, Hkv, D)
+        sane = _sanitize(
+            (dp, l_ax, None if l_model else "model", None), shape, mesh)
+    elif name in ("c_kv", "k_rope"):             # (B, L, r)
+        sane = _sanitize((dp, l_ax, None), shape, mesh)
+    elif name == "h" and len(shape) == 4:        # ssd state (B, H, P, N)
+        sane = _sanitize((dp, "model", None, None), shape, mesh)
+    elif name == "h":                            # rglru state (B, W)
+        sane = _sanitize((dp, "model"), shape, mesh)
+    elif name == "conv":                         # (B, w-1, C)
+        sane = _sanitize((dp, None, "model"), shape, mesh)
+    else:
+        sane = _sanitize((dp,) + (None,) * (len(shape) - 1), shape, mesh)
+    if stacked:
+        sane = P(None, *sane)
+    return sane
+
+
+def cache_shardings(cache_shapes, cfg: ModelConfig, mesh: Mesh,
+                    batch: int, l_model: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_pspec_for(path, leaf, cfg, mesh, batch, l_model)),
+        cache_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

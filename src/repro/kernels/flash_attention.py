@@ -1,0 +1,112 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Targets the MXU with (block_q x head_dim) @ (head_dim x block_k) tiles held
+in VMEM and the classic online-softmax running (m, l, acc) state in VMEM
+scratch that persists across the sequential kv grid dimension.  Supports
+causal, sliding-window (local) and aligned-chunk masking plus logit
+softcapping (gemma2-style).
+
+Layout: q, k, v are (BH, S, D) — batch and heads pre-merged by ops.py
+(GQA callers repeat kv to q heads first; the model's XLA path keeps grouped
+einsums, this kernel is the TPU hot-spot variant).
+
+Grid: (BH, n_q_blocks, n_kv_blocks); kv innermost so scratch carries the
+online softmax state; out written on the last kv step.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -2.3819763e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, kind: str, window: int,
+            softcap: float, block_q: int, block_k: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0].astype(jnp.float32)          # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    valid = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        valid &= q_pos >= k_pos
+    if kind == "local":
+        valid &= (q_pos - k_pos) < window
+    elif kind == "chunked":
+        valid &= (q_pos // window) == (k_pos // window)
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev = m_ref[:, 0]                       # (bq,)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+    m_ref[:, 0] = m_cur
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot(p.astype(v_ref.dtype), v_ref[0],
+                                  preferred_element_type=jnp.float32))
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, kind: str = "global",
+                    window: int = 0, softcap: float = 0.0,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False):
+    """q, k, v: (BH, S, D) -> (BH, S, D)."""
+    BH, S, D = q.shape
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    while S % bq:
+        bq -= 1
+    while S % bk:
+        bk -= 1
+    n_q, n_kv = S // bq, S // bk
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, kind=kind, window=window,
+        softcap=softcap, block_q=bq, block_k=bk, n_kv=n_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,74 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op accepts model-native layouts, handles GQA head expansion /
+transposes, and dispatches to the Pallas kernel (``use_pallas=True``,
+``interpret=True`` for CPU validation) or the jnp oracle.  On this CPU
+container the kernels are exercised in interpret mode; on TPU the same
+call sites compile the real kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .rfr_inference import rfr_forest_apply
+from .rglru_scan import rglru_scan
+from .ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("causal", "kind", "window", "softcap",
+                                   "use_pallas", "interpret"))
+def attention_op(q, k, v, *, causal=True, kind="global", window=0,
+                 softcap=0.0, use_pallas=True, interpret=True):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) -> (B, S, Hq, D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != Hq:
+        k = jnp.repeat(k, Hq // Hkv, axis=2)
+        v = jnp.repeat(v, Hq // Hkv, axis=2)
+    qm = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    km = k.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    vm = v.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    fn = (partial(flash_attention, interpret=interpret) if use_pallas
+          else ref.flash_attention_ref)
+    out = fn(qm, km, vm, causal=causal, kind=kind, window=window,
+             softcap=softcap)
+    return out.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def rglru_op(a, b, h0=None, *, use_pallas=True, interpret=True):
+    """a, b: (B, S, W) fp32 -> h (B, S, W)."""
+    if use_pallas:
+        return rglru_scan(a, b, h0, interpret=interpret)
+    return ref.rglru_scan_ref(a, b, h0)
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd_op(x, dt, A, Bm, Cm, h0=None, *, chunk=256, use_pallas=True,
+           interpret=True):
+    """Model layout: x (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative;
+    Bm, Cm: (B,S,H,N).  Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    xt = x.transpose(0, 2, 1, 3)
+    dtt = dt.transpose(0, 2, 1)
+    dA = dtt * A[None, :, None]
+    Bt = Bm.transpose(0, 2, 1, 3)
+    Ct = Cm.transpose(0, 2, 1, 3)
+    if use_pallas:
+        y, h = ssd_scan(xt, dA, dtt, Bt, Ct, h0, chunk=chunk,
+                        interpret=interpret)
+    else:
+        y, h = ref.ssd_scan_ref(xt, dA, dtt, Bt, Ct, h0)
+    return y.transpose(0, 2, 1, 3), h
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def rfr_op(x, feat, thr, leaf, *, use_pallas=True, interpret=True):
+    """Forest inference: x (N, F) -> (N,) predictions."""
+    if use_pallas:
+        return rfr_forest_apply(x, feat, thr, leaf, interpret=interpret)
+    return ref.rfr_forest_ref(x, feat, thr, leaf)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every kernel — deliberately naive, O(S^2)/serial,
+independent of both the Pallas kernels and the model-layer implementations
+so they can grade either."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -2.3819763e38
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        kind: str = "global", window: int = 0,
+                        softcap: float = 0.0):
+    """q, k, v: (BH, S, D). Full materialized softmax attention."""
+    BH, S, D = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    valid = jnp.ones((S, S), bool)
+    if causal:
+        valid &= qp >= kp
+    if kind == "local":
+        valid &= (qp - kp) < window
+    elif kind == "chunked":
+        valid &= (qp // window) == (kp // window)
+    s = jnp.where(valid[None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Serial recurrence h_t = a_t h_{t-1} + b_t.  a, b: (B, S, W)."""
+    B, S, W = a.shape
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.moveaxis(a, 1, 0),
+                                   jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def ssd_scan_ref(x, dA, dt, Bm, Cm, h0=None):
+    """Serial SSM recurrence (token by token).
+
+    x: (B,H,S,P); dA, dt: (B,H,S); Bm, Cm: (B,H,S,N).
+    h_t = exp(dA_t) h_{t-1} + dt_t * x_t B_t^T;  y_t = h_t C_t.
+    Returns (y (B,H,S,P), h_final (B,H,P,N))."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    h = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dA_t, dt_t, B_t, C_t = inp  # (B,H,P), (B,H), (B,H), (B,H,N)
+        h = (h * jnp.exp(dA_t)[..., None, None]
+             + dt_t[..., None, None] * x_t[..., :, None] * B_t[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dA, 2, 0),
+          jnp.moveaxis(dt, 2, 0), jnp.moveaxis(Bm, 2, 0),
+          jnp.moveaxis(Cm, 2, 0))
+    h_final, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype), h_final
+
+
+def rfr_forest_ref(x, feat, thr, leaf):
+    """Row-by-row, tree-by-tree descent in plain numpy semantics."""
+    import numpy as np
+    x = np.asarray(x)
+    feat = np.asarray(feat)
+    thr = np.asarray(thr)
+    leaf = np.asarray(leaf)
+    N = x.shape[0]
+    T, NN = feat.shape
+    depth = (NN + 1).bit_length() - 1
+    out = np.zeros(N, np.float32)
+    for n in range(N):
+        acc = 0.0
+        for t in range(T):
+            idx = 0
+            for _ in range(depth):
+                if x[n, feat[t, idx]] >= thr[t, idx]:
+                    idx = 2 * idx + 2
+                else:
+                    idx = 2 * idx + 1
+            acc += leaf[t, idx - NN]
+        out[n] = acc / T
+    return jnp.asarray(out)

@@ -1,0 +1,65 @@
+"""RG-LRU linear recurrence h_t = a_t * h_{t-1} + b_t — Pallas TPU kernel.
+
+The recurrence is serial in time but fully parallel over (batch, width), so
+the kernel tiles width into VMEM lanes and walks the sequence in blocks:
+grid (B, n_w_blocks, n_s_blocks) with the sequence dim innermost; the carry
+h lives in VMEM scratch persisting across sequence-grid steps.  Within a
+block, a ``fori_loop`` performs ``block_s`` vectorized (width-wide) steps —
+on TPU each step is one VPU multiply-add over the (8, 128)-tiled width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, h_ref, carry_ref, *, block_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        carry_ref[0, :] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0]                     # (block_s, block_w) fp32
+    b = b_ref[0]
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        h_ref[0, t, :] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, carry_ref[0, :])
+    carry_ref[0, :] = h
+
+
+def rglru_scan(a, b, h0=None, *, block_s: int = 256, block_w: int = 512,
+               interpret: bool = False):
+    """a, b: (B, S, W) fp32; h0: (B, W) fp32 or None. Returns h (B, S, W)."""
+    B, S, W = a.shape
+    bs = min(block_s, S)
+    while S % bs:
+        bs -= 1
+    bw = min(block_w, W)
+    while W % bw:
+        bw -= 1
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+
+    kernel = functools.partial(_kernel, block_s=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, W // bw, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, bw), lambda bi, wi, si: (bi, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,100 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+One grid step = one (batch, head, chunk) cell.  The chunk dimension is the
+innermost (sequential) grid axis; the carried SSM state (head_dim x d_state)
+lives in VMEM scratch across chunk steps.  Within a chunk everything is MXU
+matmuls over (chunk x chunk) / (chunk x d_state) / (chunk x head_dim) tiles:
+
+    y_diag = ((C B^T) .* L .* dt) x          within-chunk "attention"
+    y_off  = exp(cum) .* (C h_in^T)          contribution of carried state
+    h_out  = exp(sum_dA) h_in + x^T (B .* w) state update
+
+Layouts (pre-transposed by ops.py): x (B, H, S, P); dt/dA (B, H, S);
+Bm/Cm (B, H, S, N).  Outputs: y (B, H, S, P), final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, da_ref, dt_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
+            state_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (c, P)
+    dA = da_ref[0, 0].astype(jnp.float32)      # (c,)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (c,)
+    Bm = b_ref[0, 0].astype(jnp.float32)       # (c, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)       # (c, N)
+
+    cums = jnp.cumsum(dA)                      # (c,)
+    # lower-triangular decay matrix L[i, j] = exp(cums[i] - cums[j]), i >= j
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = cums[:, None] - cums[None, :]
+    L = jnp.where(li >= lj, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    M = scores * L * dt[None, :]
+    y = jax.lax.dot(M, x, preferred_element_type=jnp.float32)
+
+    h_in = state_ref[...]                      # (P, N)
+    y += jnp.exp(cums)[:, None] * jax.lax.dot_general(
+        Cm, h_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    w = (jnp.exp(cums[-1] - cums) * dt)[:, None]   # (c, 1)
+    h_new = (h_in * jnp.exp(cums[-1])
+             + jax.lax.dot_general(x, Bm * w, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    state_ref[...] = h_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan(x, dA, dt, Bm, Cm, h0=None, *, chunk: int = 256,
+             interpret: bool = False):
+    """x: (B,H,S,P); dA, dt: (B,H,S); Bm, Cm: (B,H,S,N); h0: (B,H,P,N).
+    Returns (y (B,H,S,P), h_final (B,H,P,N))."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    kernel = functools.partial(_kernel, chunk=c, n_chunks=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, P), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, c), lambda b, h, i: (b, h, i)),
+            pl.BlockSpec((1, 1, c), lambda b, h, i: (b, h, i)),
+            pl.BlockSpec((1, 1, c, N), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, c, N), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, P), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dA, dt, Bm, Cm, h0)

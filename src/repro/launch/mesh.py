@@ -1,0 +1,30 @@
+"""Production mesh definition (TPU v5e pods).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state.  The dry-run process
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import to get placeholder devices; tests and benchmarks see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link (~4 links usable per chip)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_data: int = 2, n_model: int = 2,
+                    n_pod: int = 0) -> jax.sharding.Mesh:
+    """Small mesh for CPU tests (requires host-device override to >=4)."""
+    if n_pod:
+        return jax.make_mesh((n_pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

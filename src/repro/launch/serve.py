@@ -1,0 +1,68 @@
+"""Serving driver: Jiagu control plane over the 10 architecture serving
+functions (replica scheduling simulation at cluster scale; use
+examples/serve_cluster.py for real model compute at smoke scale).
+
+  PYTHONPATH=src python -m repro.launch.serve [--seconds 600] \
+      [--scheduler jiagu|gsight|owl|k8s] [--release 45] [--no-dual]
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    from ..core import (Autoscaler, Cluster, GroundTruth, GsightScheduler,
+                        JiaguScheduler, K8sScheduler, OwlScheduler,
+                        PerfPredictor, ProfileStore, QoSStore,
+                        ScalingConfig, SimConfig, Simulation,
+                        arch_functions, generate_dataset, realworld_trace)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=int, default=600)
+    ap.add_argument("--scheduler", default="jiagu",
+                    choices=["jiagu", "gsight", "owl", "k8s"])
+    ap.add_argument("--release", type=float, default=45.0)
+    ap.add_argument("--keepalive", type=float, default=60.0)
+    ap.add_argument("--no-dual", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    specs = arch_functions()
+    gt = GroundTruth(seed=args.seed)
+    store = ProfileStore(seed=args.seed)
+    qos = QoSStore(store, gt)
+    pred = PerfPredictor(n_trees=24, max_depth=8, seed=args.seed)
+    X, y = generate_dataset(specs, gt, store, qos, 1500, seed=args.seed + 1)
+    pred.add_dataset(X, y)
+
+    cluster = Cluster(specs)
+    sched = {"jiagu": lambda: JiaguScheduler(cluster, store, qos, pred),
+             "gsight": lambda: GsightScheduler(cluster, store, qos, pred),
+             "owl": lambda: OwlScheduler(cluster, store, qos),
+             "k8s": lambda: K8sScheduler(cluster, store, qos)}[
+        args.scheduler]()
+    aut = Autoscaler(cluster, sched, ScalingConfig(
+        release_s=args.release, keepalive_s=args.keepalive,
+        dual_staged=not args.no_dual and args.scheduler == "jiagu"))
+    trace = realworld_trace(sorted(specs), duration_s=args.seconds,
+                            seed=args.seed + 7)
+    sim = Simulation(specs, trace, sched, aut, gt, store, qos,
+                     predictor=pred, cfg=SimConfig(collect_samples=True))
+    res = sim.run()
+
+    s = res.sched
+    print(f"scheduler={args.scheduler} dual={not args.no_dual}")
+    print(f"density: {res.density:.2f} instances/node | QoS violations: "
+          f"{100 * res.qos_violation_rate:.2f}%")
+    print(f"scheduling: {s.decisions} decisions, fast={s.fast} "
+          f"slow={s.slow}, mean latency {s.mean_latency_ms:.3f} ms")
+    if res.scaling:
+        sc = res.scaling
+        print(f"scaling: {sc.real_cold_starts} real / "
+              f"{sc.logical_cold_starts} logical cold starts, "
+              f"{sc.releases} releases, {sc.migrations} migrations, "
+              f"mean cold start {sc.mean_cold_start_ms:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .model import (apply_blocks, block_structure, decode_step, final_hidden,
+                    forward, init_cache, init_params, layer_specs,
+                    logits_from_hidden, prefill)
+from .steps import chunked_xent, loss_fn, make_train_batch
+
+__all__ = [
+    "apply_blocks", "block_structure", "decode_step", "final_hidden",
+    "forward", "init_cache", "init_params", "layer_specs",
+    "logits_from_hidden", "prefill", "chunked_xent", "loss_fn",
+    "make_train_batch",
+]

@@ -1,0 +1,365 @@
+"""Attention blocks: MHA / GQA / MQA, global / local / chunked, and MLA.
+
+Memory-aware by construction: prefill/train attention is computed with a
+*q-block scan* ("XLA-flash") — a ``lax.scan`` over query blocks so the
+materialized score tensor is O(q_block x kv_span) instead of O(S^2).  For
+local / chunked layers the kv span is a static window slice, so long
+sequences never touch a full-length score matrix.
+
+Decode (single new token against a KV cache) uses direct attention; the MLA
+path implements the *absorbed* decode (q absorbed into the kv_lora latent so
+the cache stays compressed — the DeepSeek-V2 serving optimization).
+
+Layout conventions:
+    activations  (B, S, d_model)
+    q/k/v        (B, S, H, D)
+    caches       (B, L, H_kv, D)   (L = max_len for global, window for local)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import pctx
+from .layers import apply_rope, dense_init, rmsnorm, rmsnorm_init, softcap
+
+_NEG_INF = -2.3819763e38  # bf16-safe large negative
+
+
+class AttnSpec(NamedTuple):
+    """Static per-layer attention behaviour."""
+
+    kind: str               # "global" | "local" | "chunked"
+    causal: bool
+    window: int             # receptive window for local/chunked
+    rope_theta: float       # 0.0 -> NoPE (llama4 global layers)
+    softcap: float
+    qk_norm: bool
+    q_block: int = 512
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False,
+                   qk_norm: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], (d_model, n_heads, head_dim), d_model, dtype),
+        "w_k": dense_init(ks[1], (d_model, n_kv_heads, head_dim), d_model, dtype),
+        "w_v": dense_init(ks[2], (d_model, n_kv_heads, head_dim), d_model, dtype),
+        "w_o": dense_init(ks[3], (n_heads, head_dim, d_model),
+                          n_heads * head_dim, dtype),
+    }
+    if qkv_bias:
+        p["b_q"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["b_k"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+        p["b_v"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(head_dim, dtype)
+    return p
+
+
+def mla_init(key, d_model: int, n_heads: int, mla, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    qk_hd = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    return {
+        "w_dq": dense_init(ks[0], (d_model, mla.q_lora_rank), d_model, dtype),
+        "q_norm": rmsnorm_init(mla.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], (mla.q_lora_rank, n_heads, qk_hd),
+                           mla.q_lora_rank, dtype),
+        "w_dkv": dense_init(
+            ks[2], (d_model, mla.kv_lora_rank + mla.qk_rope_head_dim),
+            d_model, dtype),
+        "kv_norm": rmsnorm_init(mla.kv_lora_rank, dtype),
+        "w_ukv": dense_init(
+            ks[3], (mla.kv_lora_rank, n_heads,
+                    mla.qk_nope_head_dim + mla.v_head_dim),
+            mla.kv_lora_rank, dtype),
+        "w_o": dense_init(ks[4], (n_heads, mla.v_head_dim, d_model),
+                          n_heads * mla.v_head_dim, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# q-block scanned attention (prefill / train)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(params, x, spec: AttnSpec, positions, eps):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"].astype(dtype))
+    if "b_q" in params:
+        q = q + params["b_q"].astype(dtype)
+        k = k + params["b_k"].astype(dtype)
+        v = v + params["b_v"].astype(dtype)
+    if spec.qk_norm:
+        q = rmsnorm(params["q_norm"], q, eps)
+        k = rmsnorm(params["k_norm"], k, eps)
+    if spec.rope_theta:
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    q = pctx.constrain(q, "attn_q")
+    k = pctx.constrain(k, "attn_kv")
+    v = pctx.constrain(v, "attn_kv")
+    return q, k, v
+
+
+def blockwise_attention(q, k, v, spec: AttnSpec, q_offset: int = 0):
+    """Scan over query blocks; kv span restricted statically per kind.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, Dk/Dv).  Returns (B, Sq, Hq, Dv).
+    Assumes q positions are ``q_offset + arange(Sq)`` and kv positions are
+    ``arange(Skv)`` (self-attention over one segment).
+    """
+    B, Sq, Hq, Dk = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dk)
+
+    qb = min(spec.q_block, Sq)
+    if spec.kind == "chunked" and Sq > spec.window:
+        # a q block must lie within one aligned chunk: qb | window
+        qb = min(qb, spec.window)
+        while Sq % qb or spec.window % qb:
+            qb -= 1
+    else:
+        while Sq % qb:
+            qb -= 1
+    n_blocks = Sq // qb
+
+    # static kv span per block
+    if spec.kind == "global":
+        span = Skv
+    elif spec.kind == "local":
+        span = min(spec.window + qb, Skv)
+    else:  # chunked: a q block lies within one aligned chunk
+        span = min(spec.window, Skv)
+
+    qg = q.reshape(B, n_blocks, qb, Hkv, G, Dk).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(carry, inp):
+        blk_idx, q_blk = inp
+        q_start = blk_idx * qb + 0  # positions are absolute already via rope
+        if spec.kind == "global":
+            kv_start = 0
+        elif spec.kind == "local":
+            kv_start = jnp.maximum(q_start + qb - span, 0)
+        else:  # chunked
+            kv_start = (q_start // spec.window) * spec.window
+            kv_start = jnp.minimum(kv_start, Skv - span)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, kv_start, span, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, kv_start, span, axis=1)
+
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        if spec.softcap:
+            s = softcap(s, spec.softcap)
+
+        q_pos = q_offset + q_start + jnp.arange(qb)
+        k_pos = kv_start + jnp.arange(span)
+        valid = jnp.ones((qb, span), bool)
+        if spec.causal:
+            valid &= q_pos[:, None] >= k_pos[None, :]
+        if spec.kind == "local":
+            valid &= q_pos[:, None] - k_pos[None, :] < spec.window
+        elif spec.kind == "chunked":
+            valid &= (q_pos[:, None] // spec.window) == (k_pos[None, :]
+                                                         // spec.window)
+        s = jnp.where(valid[None, None, None], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_blk)
+        return carry, o
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n_blocks), qg))
+    # outs: (n_blocks, B, qb, Hkv, G, Dv)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, Dv)
+    return pctx.constrain(out, "attn_q")
+
+
+def attention_forward(params, x, spec: AttnSpec, positions=None,
+                      eps: float = 1e-6):
+    """Full-sequence (train / prefill) attention.  x: (B, S, d_model)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(params, x, spec, positions, eps)
+    out = blockwise_attention(q, k, v, spec)
+    return jnp.einsum("bshd,hdm->bsm", out, params["w_o"].astype(x.dtype))
+
+
+def attention_make_cache(params, x, spec: AttnSpec, cache_len: int,
+                         positions=None, eps: float = 1e-6):
+    """Prefill returning (output, cache) with cache sized for decode."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(params, x, spec, positions, eps)
+    out = blockwise_attention(q, k, v, spec)
+    out = jnp.einsum("bshd,hdm->bsm", out, params["w_o"].astype(x.dtype))
+    L = cache_len if spec.kind == "global" else min(spec.window, cache_len)
+    if S >= L:
+        # ring layout: position p lives at slot p % L
+        ck, cv = k[:, S - L:], v[:, S - L:]
+        if spec.kind != "global" and S % L:
+            ck = jnp.roll(ck, S % L, axis=1)
+            cv = jnp.roll(cv, S % L, axis=1)
+    else:
+        pad = [(0, 0), (0, L - S), (0, 0), (0, 0)]
+        ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token per sequence, against a cache)
+# ---------------------------------------------------------------------------
+
+
+def attention_decode(params, x, cache, spec: AttnSpec, pos,
+                     eps: float = 1e-6):
+    """x: (B, 1, d_model); pos: (B,) int32 position of the new token.
+    cache: {"k": (B, L, Hkv, D), "v": ...}. Returns (out, new_cache)."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(params, x, spec, pos[:, None], eps)
+
+    L = cache["k"].shape[1]
+    if spec.kind == "global":
+        slot = jnp.minimum(pos, L - 1)
+    else:
+        slot = pos % L
+    bidx = jnp.arange(B)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+
+    Hq, Dk = q.shape[2], q.shape[3]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dk)
+    qg = q.reshape(B, 1, Hkv, G, Dk)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if spec.softcap:
+        s = softcap(s, spec.softcap)
+
+    slots = jnp.arange(L)
+    if spec.kind == "global":
+        valid = slots[None] <= pos[:, None]
+    elif spec.kind == "local":
+        valid = (slots[None] <= pos[:, None]) | (pos[:, None] + 1 >= L)
+    else:  # chunked: visible slots are those written in the current chunk
+        valid = slots[None] <= (pos[:, None] % L)
+    s = jnp.where(valid[:, None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(B, 1, Hq, -1)
+    out = jnp.einsum("bshd,hdm->bsm", o, params["w_o"].astype(x.dtype))
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(params, x, mla, spec: AttnSpec, positions, eps):
+    dtype = x.dtype
+    c_q = jnp.einsum("bsd,dl->bsl", x, params["w_dq"].astype(dtype))
+    c_q = rmsnorm(params["q_norm"], c_q, eps)
+    q = jnp.einsum("bsl,lhk->bshk", c_q, params["w_uq"].astype(dtype))
+    q_nope = q[..., : mla.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., mla.qk_nope_head_dim:], positions,
+                        spec.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(params, x, mla, spec: AttnSpec, positions, eps):
+    dtype = x.dtype
+    dkv = jnp.einsum("bsd,dl->bsl", x, params["w_dkv"].astype(dtype))
+    c_kv = rmsnorm(params["kv_norm"], dkv[..., : mla.kv_lora_rank], eps)
+    k_rope = apply_rope(dkv[..., mla.kv_lora_rank:][:, :, None, :],
+                        positions, spec.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(params, x, mla, spec: AttnSpec, positions=None,
+                eps: float = 1e-6):
+    """Prefill/train MLA: up-project then blockwise attention."""
+    B, S, _ = x.shape
+    dtype = x.dtype
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _mla_q(params, x, mla, spec, positions, eps)
+    c_kv, k_rope = _mla_ckv(params, x, mla, spec, positions, eps)
+    kv = jnp.einsum("bsl,lhk->bshk", c_kv, params["w_ukv"].astype(dtype))
+    k_nope = kv[..., : mla.qk_nope_head_dim]
+    v = kv[..., mla.qk_nope_head_dim:]
+    H = k_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, mla.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = pctx.constrain(q, "attn_q")
+    k = pctx.constrain(k, "attn_q")
+    v = pctx.constrain(v, "attn_q")
+    out = blockwise_attention(q, k, v, spec)
+    return jnp.einsum("bshd,hdm->bsm", out, params["w_o"].astype(dtype))
+
+
+def mla_make_cache(params, x, mla, spec: AttnSpec, cache_len: int,
+                   positions=None, eps: float = 1e-6):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = mla_forward(params, x, mla, spec, positions, eps)
+    c_kv, k_rope = _mla_ckv(params, x, mla, spec, positions, eps)
+    L = cache_len
+    if S >= L:
+        c_kv, k_rope = c_kv[:, S - L:], k_rope[:, S - L:]
+    else:
+        c_kv = jnp.pad(c_kv, [(0, 0), (0, L - S), (0, 0)])
+        k_rope = jnp.pad(k_rope, [(0, 0), (0, L - S), (0, 0)])
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(params, x, cache, mla, spec: AttnSpec, pos,
+               eps: float = 1e-6):
+    """Absorbed-q MLA decode: scores/context computed in the latent space so
+    the cache stays (B, L, kv_lora_rank) — never re-expanded per step."""
+    B = x.shape[0]
+    dtype = x.dtype
+    q_nope, q_rope = _mla_q(params, x, mla, spec, pos[:, None], eps)
+    ckv_new, krope_new = _mla_ckv(params, x, mla, spec, pos[:, None], eps)
+
+    L = cache["c_kv"].shape[1]
+    slot = jnp.minimum(pos, L - 1)
+    bidx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[bidx, slot].set(ckv_new[:, 0])
+    k_rope = cache["k_rope"].at[bidx, slot].set(krope_new[:, 0])
+
+    w_ukv = params["w_ukv"].astype(dtype)
+    w_uk = w_ukv[..., : mla.qk_nope_head_dim]       # (lora, H, nope)
+    w_uv = w_ukv[..., mla.qk_nope_head_dim:]         # (lora, H, v)
+    q_abs = jnp.einsum("bthn,lhn->bthl", q_nope, w_uk)  # (B,1,H,lora)
+
+    scale = 1.0 / math.sqrt(mla.qk_nope_head_dim + mla.qk_rope_head_dim)
+    s = (jnp.einsum("bthl,bsl->bhts", q_abs, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bthr,bsr->bhts", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(L)[None] <= pos[:, None]
+    s = jnp.where(valid[:, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(dtype)
+    ctx = jnp.einsum("bhts,bsl->bthl", p, c_kv)
+    o = jnp.einsum("bthl,lhv->bthv", ctx, w_uv)
+    out = jnp.einsum("bshd,hdm->bsm", o, params["w_o"].astype(dtype))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,142 @@
+"""Shared neural-net building blocks.
+
+Everything is a pure function over explicit param pytrees (nested dicts of
+jnp arrays) — no flax/haiku.  Initializers return numpy-seeded jax arrays via
+``jax.random``; compute dtype and param dtype are decoupled (params may be
+fp32 or bf16, activations run in ``cfg.dtype``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import pctx
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size: Optional[int] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-style)."""
+    if in_axis_size is None:
+        in_axis_size = shape[0]
+    std = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32, zero_centered: bool = True):
+    # gemma-style zero-centered scale: weight stored as (scale - 1)
+    return {"scale": jnp.zeros((d,), dtype) if zero_centered
+            else jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6, zero_centered: bool = True):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if zero_centered:
+        scale = scale + 1.0
+    return (x * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def _act(x, activation: str):
+    if activation == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)  # swiglu
+
+
+def mlp(params, x, activation: str = "swiglu"):
+    dtype = x.dtype
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dtype))
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dtype))
+    h = _act(gate, activation) * up
+    h = pctx.constrain(h, "ffn_hidden" if h.ndim == 3 else "ffn_hidden_2d")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), fp32."""
+    half = head_dim // 2
+    exponents = jnp.arange(0, half, dtype=jnp.float32) / half
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, n_heads, head_dim); positions: broadcastable to (..., seq)."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    inv_freq = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, half)
+    angles = angles[..., None, :]  # (..., S, 1, half) broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcapping
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": embed_init(key, (vocab, d_model), dtype)}
+
+
+def embed(params, tokens: jnp.ndarray, scale: bool, d_model: int,
+          dtype=jnp.bfloat16) -> jnp.ndarray:
+    x = jnp.take(params["table"], tokens, axis=0).astype(dtype)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(d_model), dtype)
+    return x
+
+
+def unembed(params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d_model) -> logits (..., vocab)."""
+    return jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))

@@ -1,0 +1,431 @@
+"""Model assembly: configs -> params -> forward / prefill / decode.
+
+Depth is compiled as ``jax.lax.scan`` over *periods* of the layer pattern:
+layer params are stacked per pattern-position with a leading ``n_periods``
+axis, so the HLO size is O(pattern length), not O(n_layers) — an 80-layer
+model lowers as fast as a 2-layer one.  Non-periodic prefix layers (e.g.
+DeepSeek's first dense layer) and ``pattern_tail`` layers are unrolled.
+
+Param tree layout::
+
+    {"embed": {...}, "frontend_proj"?, "lm_head"?, "final_norm",
+     "head": [layer0, ...],                  # unrolled prefix
+     "body": {"p0": stacked, "p1": stacked}, # scanned periods
+     "tail": [layerK, ...]}                  # unrolled suffix
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import pctx
+from . import rglru as rglru_mod
+from . import ssd as ssd_mod
+from .layers import (dense_init, embed, embedding_init, mlp, mlp_init,
+                     rmsnorm, rmsnorm_init, unembed)
+
+
+class LayerSpec(NamedTuple):
+    kind: str            # global | local | chunked | recurrent | ssm
+    is_moe: bool
+    d_ff: int            # dense-FFN width for this layer (0 -> no FFN)
+    rope_theta: float    # 0.0 -> NoPE
+    window: int
+    causal: bool
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Structure
+# ---------------------------------------------------------------------------
+
+
+def layer_specs(cfg: ModelConfig) -> list[LayerSpec]:
+    specs = []
+    for i, kind in enumerate(cfg.layer_kinds()):
+        is_moe = cfg.is_moe_layer(i)
+        if kind == "ssm":
+            d_ff = 0
+        elif is_moe:
+            d_ff = 0  # MoE layer: expert dims live in MoEConfig
+        elif cfg.moe is not None:
+            d_ff = cfg.moe.d_ff_dense or cfg.d_ff
+        else:
+            d_ff = cfg.d_ff
+        if kind == "global":
+            theta = (0.0 if cfg.nope_global
+                     else (cfg.rope_theta_global or cfg.rope_theta))
+        else:
+            theta = cfg.rope_theta
+        specs.append(LayerSpec(
+            kind=kind, is_moe=is_moe, d_ff=d_ff, rope_theta=theta,
+            window=cfg.window, causal=not cfg.encoder_only))
+    return specs
+
+
+def block_structure(cfg: ModelConfig):
+    """-> (head_specs, period_specs, n_periods, tail_specs)."""
+    specs = layer_specs(cfg)
+    n_head = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_tail = len(cfg.pattern_tail)
+    body = specs[n_head: len(specs) - n_tail] if n_tail else specs[n_head:]
+    P = len(cfg.pattern)
+    if cfg.moe is not None:
+        P = math.lcm(P, cfg.moe.moe_period)
+    assert len(body) % P == 0, (cfg.name, len(body), P)
+    n_periods = len(body) // P
+    period = body[:P]
+    for j in range(n_periods):  # uniformity check (required for scan)
+        assert tuple(body[j * P: (j + 1) * P]) == tuple(period), cfg.name
+    tail = specs[len(specs) - n_tail:] if n_tail else []
+    return specs[:n_head], period, n_periods, tail
+
+
+def attn_spec(cfg: ModelConfig, spec: LayerSpec, q_block: int = 512):
+    return attn.AttnSpec(
+        kind=spec.kind, causal=spec.causal, window=spec.window,
+        rope_theta=spec.rope_theta, softcap=cfg.attn_softcap,
+        qk_norm=cfg.qk_norm, q_block=q_block)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec, param_dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict[str, Any] = {"pre_norm": rmsnorm_init(d, param_dtype)}
+    if spec.kind in ("global", "local", "chunked"):
+        if cfg.mla is not None:
+            p["mla"] = attn.mla_init(ks[0], d, cfg.n_heads, cfg.mla,
+                                     param_dtype)
+        else:
+            p["attn"] = attn.attention_init(
+                ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim(), cfg.qkv_bias, cfg.qk_norm,
+                param_dtype)
+        if cfg.post_norms:
+            p["post_attn_norm"] = rmsnorm_init(d, param_dtype)
+    elif spec.kind == "recurrent":
+        p["rglru"] = rglru_mod.rglru_init(ks[0], d, cfg.n_heads,
+                                          cfg.rglru, param_dtype)
+    elif spec.kind == "ssm":
+        p["ssd"] = ssd_mod.ssd_init(ks[0], d, cfg.ssd, param_dtype)
+        return p  # mamba2 block has no separate FFN / second norm
+    p["pre_ffn_norm"] = rmsnorm_init(d, param_dtype)
+    if spec.is_moe:
+        p["moe"] = moe_mod.moe_init(ks[1], d, cfg.moe, param_dtype)
+    elif spec.d_ff:
+        p["mlp"] = mlp_init(ks[1], d, spec.d_ff, param_dtype)
+    if cfg.post_norms:
+        p["post_ffn_norm"] = rmsnorm_init(d, param_dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, param_dtype=None):
+    param_dtype = param_dtype or jnp.float32
+    head_s, period_s, n_periods, tail_s = block_structure(cfg)
+    n_keys = len(head_s) + len(period_s) * n_periods + len(tail_s) + 3
+    keys = list(jax.random.split(key, n_keys))
+    params: dict[str, Any] = {
+        "embed": embedding_init(keys.pop(), cfg.vocab_size, cfg.d_model,
+                                param_dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, param_dtype),
+    }
+    if not cfg.tie_embeddings and not cfg.encoder_only:
+        params["lm_head"] = embedding_init(keys.pop(), cfg.vocab_size,
+                                           cfg.d_model, param_dtype)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = dense_init(
+            keys.pop(), (cfg.frontend_dim, cfg.d_model), cfg.frontend_dim,
+            param_dtype)
+    params["head"] = [init_layer(keys.pop(), cfg, s, param_dtype)
+                      for s in head_s]
+    body = {}
+    for pi, s in enumerate(period_s):
+        per = [init_layer(keys.pop(), cfg, s, param_dtype)
+               for _ in range(n_periods)]
+        body[f"p{pi}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    params["body"] = body
+    params["tail"] = [init_layer(keys.pop(), cfg, s, param_dtype)
+                      for s in tail_s]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int, dtype):
+    d = cfg.d_model
+    if spec.kind in ("global", "local", "chunked"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim),
+                                        dtype)}
+        L = max_len if spec.kind == "global" else min(spec.window, max_len)
+        hd = cfg.resolved_head_dim()
+        return {"k": jnp.zeros((batch, L, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, L, cfg.n_kv_heads, hd), dtype)}
+    if spec.kind == "recurrent":
+        r = cfg.rglru
+        w = r.lru_width or d
+        return {"h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, r.conv_width - 1, w), dtype)}
+    # ssm
+    s = cfg.ssd
+    di = s.d_inner(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return {"h": jnp.zeros((batch, s.n_heads(d), s.head_dim, s.d_state),
+                           dtype),
+            "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = _dtype(cfg)
+    head_s, period_s, n_periods, tail_s = block_structure(cfg)
+    cache: dict[str, Any] = {
+        "head": [init_layer_cache(cfg, s, batch, max_len, dtype)
+                 for s in head_s],
+        "tail": [init_layer_cache(cfg, s, batch, max_len, dtype)
+                 for s in tail_s],
+    }
+    body = {}
+    for pi, s in enumerate(period_s):
+        one = init_layer_cache(cfg, s, batch, max_len, dtype)
+        body[f"p{pi}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape), one)
+    cache["body"] = body
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+
+def _residual(cfg, params, key, y):
+    if cfg.post_norms and key in params:
+        y = rmsnorm(params[key], y, cfg.norm_eps)
+    return y
+
+
+def block_apply(cfg: ModelConfig, spec: LayerSpec, params, x, positions,
+                mode: str, cache=None, pos=None, cache_len: int = 0,
+                dispatch: Optional[str] = None):
+    """One transformer block. Returns (x, new_cache, aux_loss)."""
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    x = pctx.constrain(x, "activations")
+    h = rmsnorm(params["pre_norm"], x, eps)
+    new_cache = cache
+    if spec.kind in ("global", "local", "chunked"):
+        aspec = attn_spec(cfg, spec)
+        if cfg.mla is not None:
+            if mode == "forward":
+                y = attn.mla_forward(params["mla"], h, cfg.mla, aspec,
+                                     positions, eps)
+            elif mode == "prefill":
+                y, new_cache = attn.mla_make_cache(
+                    params["mla"], h, cfg.mla, aspec, cache_len, positions,
+                    eps)
+            else:
+                y, new_cache = attn.mla_decode(params["mla"], h, cache,
+                                               cfg.mla, aspec, pos, eps)
+        else:
+            if mode == "forward":
+                y = attn.attention_forward(params["attn"], h, aspec,
+                                           positions, eps)
+            elif mode == "prefill":
+                y, new_cache = attn.attention_make_cache(
+                    params["attn"], h, aspec, cache_len, positions, eps)
+            else:
+                y, new_cache = attn.attention_decode(params["attn"], h,
+                                                     cache, aspec, pos, eps)
+        x = x + _residual(cfg, params, "post_attn_norm", y)
+    elif spec.kind == "recurrent":
+        if mode == "forward":
+            y = rglru_mod.rglru_forward(params["rglru"], h, cfg.n_heads,
+                                        cfg.rglru)
+        elif mode == "prefill":
+            y, new_cache = rglru_mod.rglru_forward(
+                params["rglru"], h, cfg.n_heads, cfg.rglru,
+                return_state=True)
+        else:
+            y, new_cache = rglru_mod.rglru_decode(params["rglru"], h, cache,
+                                                  cfg.n_heads, cfg.rglru)
+        x = x + y
+    else:  # ssm
+        if mode == "forward":
+            y = ssd_mod.ssd_forward(params["ssd"], h, cfg.ssd, eps)
+        elif mode == "prefill":
+            y, new_cache = ssd_mod.ssd_forward(params["ssd"], h, cfg.ssd,
+                                               eps, return_state=True)
+        else:
+            y, new_cache = ssd_mod.ssd_decode(params["ssd"], h, cache,
+                                              cfg.ssd, eps)
+        return x + y, new_cache, aux
+
+    # FFN half
+    h = rmsnorm(params["pre_ffn_norm"], x, eps)
+    if spec.is_moe:
+        y = moe_mod.moe_forward(params["moe"], h, cfg.moe, cfg.activation,
+                                dispatch)
+        if mode == "forward":
+            aux = moe_mod.moe_aux_loss(params["moe"], h, cfg.moe)
+    elif spec.d_ff:
+        y = mlp(params["mlp"], h, cfg.activation)
+    else:
+        y = jnp.zeros_like(x)
+    x = x + _residual(cfg, params, "post_ffn_norm", y)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, params, batch):
+    """-> (x (B,S,d), positions (B,S))."""
+    dtype = _dtype(cfg)
+    if cfg.frontend == "audio":
+        x = jnp.einsum("bsf,fd->bsd", batch["frames"].astype(dtype),
+                       params["frontend_proj"].astype(dtype))
+    elif cfg.frontend == "vision":
+        img = jnp.einsum("bsf,fd->bsd", batch["patch_embeds"].astype(dtype),
+                         params["frontend_proj"].astype(dtype))
+        txt = embed(params["embed"], batch["tokens"], cfg.emb_scale,
+                    cfg.d_model, dtype)
+        x = jnp.concatenate([img, txt], axis=1)
+    else:
+        x = embed(params["embed"], batch["tokens"], cfg.emb_scale,
+                  cfg.d_model, dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return x, positions
+
+
+def apply_blocks(cfg: ModelConfig, params, x, positions, mode: str,
+                 cache=None, pos=None, cache_len: int = 0,
+                 remat: bool = False, dispatch: Optional[str] = None):
+    """Run all layers. Returns (x, new_cache, aux_sum)."""
+    head_s, period_s, n_periods, tail_s = block_structure(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_unrolled(x, specs, plist, clist, aux_total):
+        new_caches = []
+        for i, s in enumerate(specs):
+            c = clist[i] if clist is not None else None
+            x, nc, aux = block_apply(cfg, s, plist[i], x, positions, mode,
+                                     c, pos, cache_len, dispatch)
+            new_caches.append(nc)
+            aux_total = aux_total + aux
+        return x, new_caches, aux_total
+
+    x, head_cache, aux_total = run_unrolled(
+        x, head_s, params["head"],
+        cache["head"] if cache is not None else None, aux_total)
+
+    def period_fn(x, pparams, pcache):
+        new_c = {}
+        aux = jnp.zeros((), jnp.float32)
+        for pi, s in enumerate(period_s):
+            c = pcache[f"p{pi}"] if pcache is not None else None
+            x, nc, a = block_apply(cfg, s, pparams[f"p{pi}"], x, positions,
+                                   mode, c, pos, cache_len, dispatch)
+            new_c[f"p{pi}"] = nc
+            aux = aux + a
+        return x, new_c, aux
+
+    if remat:
+        period_fn = jax.checkpoint(period_fn)
+
+    if n_periods:
+        if cache is not None:
+            def scan_body(carry, xs):
+                x, aux = carry
+                pparams, pcache = xs
+                x, nc, a = period_fn(x, pparams, pcache)
+                return (x, aux + a), nc
+            (x, aux_total), body_cache = jax.lax.scan(
+                scan_body, (x, aux_total), (params["body"], cache["body"]))
+        else:
+            def scan_body(carry, pparams):
+                x, aux = carry
+                x, _, a = period_fn(x, pparams, None)
+                return (x, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(
+                scan_body, (x, aux_total), params["body"])
+            body_cache = None
+
+    x, tail_cache, aux_total = run_unrolled(
+        x, tail_s, params["tail"],
+        cache["tail"] if cache is not None else None, aux_total)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"head": head_cache, "body": body_cache,
+                     "tail": tail_cache}
+    return x, new_cache, aux_total
+
+
+def final_hidden(cfg: ModelConfig, params, batch, remat: bool = False,
+                 dispatch: Optional[str] = None):
+    """Train/scoring path: full sequence -> final hidden states + aux."""
+    x, positions = embed_inputs(cfg, params, batch)
+    x, _, aux = apply_blocks(cfg, params, x, positions, "forward",
+                             remat=remat, dispatch=dispatch)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def logits_from_hidden(cfg: ModelConfig, params, h):
+    table = params.get("lm_head", params["embed"])
+    out = unembed(table, h)
+    if cfg.logit_softcap:
+        out = jnp.tanh(out / cfg.logit_softcap) * cfg.logit_softcap
+    return out
+
+
+def forward(cfg: ModelConfig, params, batch, remat: bool = False,
+            dispatch: Optional[str] = None):
+    h, aux = final_hidden(cfg, params, batch, remat, dispatch)
+    return logits_from_hidden(cfg, params, h)
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len: int,
+            dispatch: Optional[str] = None):
+    """-> (last-position logits (B, V), cache)."""
+    x, positions = embed_inputs(cfg, params, batch)
+    cache = init_cache(cfg, x.shape[0], cache_len)
+    x, cache, _ = apply_blocks(cfg, params, x, positions, "prefill",
+                               cache=cache, cache_len=cache_len,
+                               dispatch=dispatch)
+    h = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return logits_from_hidden(cfg, params, h)[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, pos, cache,
+                dispatch: Optional[str] = None):
+    """tokens: (B,) int32; pos: (B,) int32. -> (logits (B, V), cache)."""
+    dtype = _dtype(cfg)
+    x = embed(params["embed"], tokens[:, None], cfg.emb_scale, cfg.d_model,
+              dtype)
+    x, cache, _ = apply_blocks(cfg, params, x, pos[:, None], "decode",
+                               cache=cache, pos=pos, dispatch=dispatch)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_from_hidden(cfg, params, h)[:, 0], cache

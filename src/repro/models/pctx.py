@@ -1,0 +1,46 @@
+"""Partitioning context: activation sharding hints for model code.
+
+The model layer is mesh-agnostic; the distributed step builders install a
+dict of NamedShardings here (trace-time Python state) and model code
+applies them via :func:`constrain`.  On a single device (tests, smoke) the
+context is empty and ``constrain`` is the identity.
+
+Keys used by the model layer:
+    moe_dispatch   (G, n, E, C) dispatch/combine one-hots
+    moe_expert_in  (E, G, C, d) expert input buffers
+    attn_qkv       (B, S, H, D) post-projection activations
+    activations    (B, S, d) residual-stream activations
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+
+_SPECS: Dict[str, object] = {}
+
+
+@contextmanager
+def sharding_hints(specs: Optional[Dict[str, object]]):
+    global _SPECS
+    old = _SPECS
+    _SPECS = dict(specs or {})
+    try:
+        yield
+    finally:
+        _SPECS = old
+
+
+def constrain(x, key: str):
+    s = _SPECS.get(key)
+    if s is None:
+        return x
+    spec = getattr(s, "spec", None)
+    if spec is not None and len(spec) > x.ndim:
+        return x  # rank-mismatched call site (e.g. flattened tokens)
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def hint(key: str):
+    return _SPECS.get(key)

@@ -1,0 +1,135 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+r_t, i_t: block-diagonal linear gates over the conv'd input.
+
+Train/prefill uses ``jax.lax.associative_scan`` over time (the recurrence
+h = a*h + b is associative) — sequence-parallel, O(log S) depth.  The Pallas
+TPU kernel for the scan lives in ``repro.kernels.rglru_scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+_C = 8.0
+_MAX_SQRT = 1e6
+
+
+def rglru_init(key, d_model: int, n_heads: int, rglru, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    w = rglru.lru_width or d_model
+    nb = n_heads
+    bw = w // nb
+    # Lambda init so that a^c in (0.9, 0.999) at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    a_param = jnp.log(jnp.expm1(-(1.0 / _C) * jnp.log(u)))
+    return {
+        "w_x": dense_init(ks[0], (d_model, w), d_model, dtype),
+        "w_gate_branch": dense_init(ks[1], (d_model, w), d_model, dtype),
+        "conv_w": dense_init(ks[2], (rglru.conv_width, w), rglru.conv_width,
+                             dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": dense_init(ks[3], (nb, bw, bw), bw, dtype),
+        "b_r": jnp.zeros((w,), dtype),
+        "w_i": dense_init(ks[5], (nb, bw, bw), bw, dtype),
+        "b_i": jnp.zeros((w,), dtype),
+        "a_param": a_param,
+        "w_out": dense_init(ks[2], (w, d_model), w, dtype),
+    }
+
+
+def _block_diag(x, w, b, nb):
+    """x: (..., W) with W = nb*bw; w: (nb, bw, bw)."""
+    shape = x.shape
+    xb = x.reshape(*shape[:-1], nb, -1)
+    out = jnp.einsum("...nb,nbc->...nc", xb, w)
+    return out.reshape(shape) + b
+
+
+def _gates(params, u, nb):
+    dtype = u.dtype
+    r = jax.nn.sigmoid(_block_diag(u, params["w_r"].astype(dtype),
+                                   params["b_r"].astype(dtype), nb)
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(u, params["w_i"].astype(dtype),
+                                   params["b_i"].astype(dtype), nb)
+                       .astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(params["a_param"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in fp32, clipped for stability near a=1
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None))
+    gated_in = i * u.astype(jnp.float32)
+    return a, beta * gated_in
+
+
+def lru_scan(a, b, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (time).
+    a, b: (B, S, W) fp32.  Returns h: (B, S, W)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    out = x * w[-1] + b
+    for i in range(1, W):
+        shifted = jnp.pad(x, [(0, 0), (i, 0), (0, 0)])[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def rglru_forward(params, x, n_heads: int, rglru, state=None,
+                  return_state: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model)."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,dw->bsw", x, params["w_gate_branch"].astype(dtype)))
+    u_raw = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(dtype))
+    if state is not None:
+        # continue the conv across the prefill boundary
+        buf = jnp.concatenate([state["conv"].astype(dtype), u_raw], axis=1)
+        u = _causal_conv(buf, params["conv_w"].astype(dtype),
+                         params["conv_b"].astype(dtype))[:, state["conv"].shape[1]:]
+    else:
+        u = _causal_conv(u_raw, params["conv_w"].astype(dtype),
+                         params["conv_b"].astype(dtype))
+    a, b = _gates(params, u, n_heads)
+    h0 = None if state is None else state["h"].astype(jnp.float32)
+    h = lru_scan(a, b, h0).astype(dtype)
+    out = jnp.einsum("bsw,wd->bsd", h * gate, params["w_out"].astype(dtype))
+    if return_state:
+        W = rglru.conv_width - 1
+        S = u_raw.shape[1]
+        tail = (u_raw[:, S - W:] if S >= W
+                else jnp.pad(u_raw, [(0, 0), (W - S, 0), (0, 0)]))
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": tail}
+    return out
+
+
+def rglru_decode(params, x, state, n_heads: int, rglru):
+    """x: (B, 1, d); state: {"h": (B, W) fp32, "conv": (B, cw-1, W)}."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,dw->bsw", x, params["w_gate_branch"].astype(dtype)))
+    u_new = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(dtype))[:, 0]
+    buf = jnp.concatenate([state["conv"].astype(dtype), u_new[:, None]],
+                          axis=1)
+    u = (jnp.einsum("bwc,wc->bc", buf, params["conv_w"].astype(dtype))
+         + params["conv_b"].astype(dtype))
+    a, b = _gates(params, u[:, None], n_heads)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = jnp.einsum("bsw,wd->bsd", h[:, None].astype(dtype) * gate,
+                     params["w_out"].astype(dtype))
+    return out, {"h": h, "conv": buf[:, 1:]}

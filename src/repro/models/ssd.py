@@ -1,0 +1,205 @@
+"""Mamba-2 SSD (state-space duality) block — pure JAX reference path.
+
+Implements the chunked SSD algorithm from the Mamba-2 paper: within-chunk
+quadratic attention-like term + inter-chunk linear state recurrence.  The
+Pallas TPU kernel for the hot loop lives in ``repro.kernels.ssd_scan``; this
+module is the model-level block (projections, conv, gating) and the jnp
+algorithm used on CPU and as the oracle.
+
+Shapes: x (B, S, d_model); inner width di = expand*d_model; heads nh =
+di/head_dim; state n = d_state; groups g (B/C shared across nh/g heads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def ssd_init(key, d_model: int, ssd, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    di = ssd.d_inner(d_model)
+    nh = ssd.n_heads(d_model)
+    g = ssd.n_groups
+    conv_ch = di + 2 * g * ssd.d_state
+    return {
+        # fused in-proj: [z(di), xBC(conv_ch), dt(nh)]
+        "w_in": dense_init(ks[0], (d_model, 2 * di + 2 * g * ssd.d_state + nh),
+                           d_model, dtype),
+        "conv_w": dense_init(ks[1], (ssd.conv_width, conv_ch), ssd.conv_width,
+                             dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32)
+                    * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+        )).astype(jnp.float32),
+        "gate_norm": rmsnorm_init(di, dtype),
+        "w_out": dense_init(ks[3], (di, d_model), di, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, x: (B, S, C), w: (W, C) -> (B, S, C)."""
+    W = w.shape[0]
+    out = x * w[-1] + b
+    for i in range(1, W):
+        shifted = jnp.pad(x, [(0, 0), (i, 0), (0, 0)])[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def _segsum(dA):
+    """dA: (..., L) -> (..., L, L) lower-tri cumulative sums: sum dA[j+1..i]."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bh, Ch, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, nh, hd); dt: (B, S, nh) (post-softplus); A: (nh,) negative;
+    Bh, Ch: (B, S, nh, n) (already broadcast from groups to heads).
+    Returns y: (B, S, nh, hd), final_state: (B, nh, hd, n).
+    """
+    Bsz, S, nh, hd = xh.shape
+    n = Bh.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+
+    r = lambda t: t.reshape(Bsz, nc, c, *t.shape[2:])
+    xh, dt, Bh, Ch = r(xh), r(dt), r(Bh), r(Ch)
+
+    dA = dt * A  # (B, nc, c, nh)
+    dA = jnp.moveaxis(dA, -1, 2)                  # (B, nc, nh, c)
+    dA_cs = jnp.cumsum(dA, axis=-1)               # within-chunk cumsum
+
+    # 1) within-chunk (quadratic) term
+    L = jnp.exp(_segsum(dA))                      # (B, nc, nh, c, c)
+    scores = jnp.einsum("bzlhn,bzshn->bzhls", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    M = scores * L
+    y_diag = jnp.einsum("bzhls,bzshp,bzsh->bzlhp", M.astype(xh.dtype),
+                        xh, dt.astype(xh.dtype))
+
+    # 2) per-chunk output states (contribution to the carried state)
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)         # (B,nc,nh,c)
+    states = jnp.einsum("bzshn,bzhs,bzsh,bzshp->bzhpn", Bh,
+                        decay_states.astype(xh.dtype), dt.astype(xh.dtype),
+                        xh)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[..., -1])                   # (B,nc,nh)
+
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None].astype(h.dtype) + st
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = (jnp.zeros((Bsz, nh, hd, n), xh.dtype) if init_state is None
+          else init_state.astype(xh.dtype))
+    final, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                          # (B,nc,nh,hd,n)
+
+    # 4) inter-chunk contribution to outputs
+    state_decay = jnp.exp(dA_cs)                             # (B,nc,nh,c)
+    y_off = jnp.einsum("bzlhn,bzhpn,bzhl->bzlhp", Ch, h_in,
+                       state_decay.astype(xh.dtype))
+    y = (y_diag + y_off).reshape(Bsz, S, nh, hd)
+    return y, final
+
+
+def ssd_forward(params, x, ssd, eps: float = 1e-6, state=None,
+                return_state: bool = False):
+    """Full-sequence Mamba-2 block. x: (B, S, d_model)."""
+    Bsz, S, d = x.shape
+    dtype = x.dtype
+    di = ssd.d_inner(d)
+    nh = ssd.n_heads(d)
+    g, n = ssd.n_groups, ssd.d_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dtype))
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: di + di + 2 * g * n]
+    dt_raw = zxbcdt[..., -nh:]
+
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(dtype),
+                                   params["conv_b"].astype(dtype)))
+    xs = xBC[..., :di].reshape(Bsz, S, nh, ssd.head_dim)
+    Bh = xBC[..., di: di + g * n].reshape(Bsz, S, g, n)
+    Ch = xBC[..., di + g * n:].reshape(Bsz, S, g, n)
+    rep = nh // g
+    Bh = jnp.repeat(Bh, rep, axis=2)
+    Ch = jnp.repeat(Ch, rep, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    init = None if state is None else state.get("h")
+    y, h_final = ssd_chunked(xs, dt, A, Bh, Ch, ssd.chunk, init)
+    y = y + xs * params["D"].astype(dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dtype))
+    if return_state:
+        conv_tail = xBC_raw_tail(zxbcdt, di, g, n, ssd.conv_width)
+        return out, {"h": h_final, "conv": conv_tail}
+    return out
+
+
+def xBC_raw_tail(zxbcdt, di, g, n, conv_width):
+    """Last (conv_width-1) pre-conv xBC inputs, for decode continuation."""
+    xBC_raw = zxbcdt[..., di: di + di + 2 * g * n]
+    W = conv_width - 1
+    S = xBC_raw.shape[1]
+    if S >= W:
+        return xBC_raw[:, S - W:]
+    return jnp.pad(xBC_raw, [(0, 0), (W - S, 0), (0, 0)])
+
+
+def ssd_decode(params, x, state, ssd, eps: float = 1e-6):
+    """Single-token step. x: (B, 1, d); state: {"h": (B,nh,hd,n),
+    "conv": (B, conv_width-1, conv_ch)}."""
+    Bsz, _, d = x.shape
+    dtype = x.dtype
+    di = ssd.d_inner(d)
+    nh = ssd.n_heads(d)
+    g, n = ssd.n_groups, ssd.d_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dtype))
+    z = zxbcdt[..., :di]
+    xBC_new = zxbcdt[:, 0, di: di + di + 2 * g * n]
+    dt_raw = zxbcdt[..., -nh:]
+
+    conv_buf = jnp.concatenate([state["conv"], xBC_new[:, None]], axis=1)
+    w = params["conv_w"].astype(dtype)
+    xBC = jnp.einsum("bwc,wc->bc", conv_buf, w) + params["conv_b"].astype(dtype)
+    xBC = jax.nn.silu(xBC)
+
+    xs = xBC[:, :di].reshape(Bsz, nh, ssd.head_dim)
+    Bh = jnp.repeat(xBC[:, di: di + g * n].reshape(Bsz, g, n), nh // g, axis=1)
+    Ch = jnp.repeat(xBC[:, di + g * n:].reshape(Bsz, g, n), nh // g, axis=1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"])                   # (B, nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                        # (B, nh)
+
+    h = (state["h"].astype(jnp.float32) * dA[..., None, None]
+         + jnp.einsum("bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32),
+                      Bh.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h)
+    y = y.astype(dtype) + xs * params["D"].astype(dtype)[None, :, None]
+    y = y.reshape(Bsz, 1, di)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dtype))
+    return out, {"h": h.astype(state["h"].dtype), "conv": conv_buf[:, 1:]}

@@ -1,0 +1,102 @@
+"""AdamW from scratch (no optax): fp32 master weights, configurable
+moment dtype (bf16 moments halve optimizer HBM for the 100B+ dry-runs),
+decoupled weight decay, global-norm clipping, warmup+cosine schedule.
+
+The optimizer state is a pytree congruent with the params tree, so the
+sharding rules that shard a weight also shard its moments — no separate
+optimizer partitioning logic (ZeRO falls out of FSDP'd params).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"   # "bfloat16" halves optimizer memory
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array       # i32 scalar
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return OptState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def schedule(cfg: AdamWConfig, step) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(math.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _decayable(path) -> bool:
+    """No weight decay on norms / biases / scalars (standard practice)."""
+    name = str(path[-1]) if path else ""
+    return not any(t in name for t in ("scale", "bias", "b_", "a_param",
+                                       "A_log", "dt_bias", "D"))
+
+
+def update(params, grads, state: OptState, cfg: AdamWConfig):
+    """-> (new_params, new_state, metrics). Everything fp32 math."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.ones(())
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        upd_ = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if _decayable(path):
+            upd_ = upd_ + cfg.weight_decay * p32
+        new_p = p32 - lr * upd_
+        return new_p.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree_util.tree_map_with_path(upd, params, grads, state.m,
+                                           state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(new_m, new_v, step), {
+        "grad_norm": gnorm, "lr": lr}

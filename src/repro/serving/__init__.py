@@ -1,0 +1,3 @@
+from .engine import Request, ServingInstance, ServingEngine
+
+__all__ = ["Request", "ServingInstance", "ServingEngine"]

@@ -1,0 +1,221 @@
+"""Serving engine: real model replicas behind Jiagu's control plane.
+
+A *function* in Jiagu's terms is a model architecture; an *instance* is a
+:class:`ServingInstance` — a replica holding weights + a slotted KV/state
+cache, running continuous batching: each engine tick prefills newly
+admitted requests into free slots and advances every active slot by one
+decode step.  The :class:`ServingEngine` is the per-node data plane the
+control plane (core/) schedules; ``examples/serve_cluster.py`` wires both
+together with real (smoke-scale) model compute.
+
+The saturated-load semantics match the paper: an instance serves at most
+``slots`` concurrent requests; the autoscaler's saturated_rps maps to
+slots/expected-latency.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import model as model_lib
+
+
+_STEP_CACHE: Dict[tuple, tuple] = {}
+
+
+def _jitted_steps(cfg: ModelConfig, max_len: int):
+    """Jitted decode/prefill shared across replicas of one function (a
+    replica must not trigger its own compilation — that would be a cold
+    start the paper's cfork constant already accounts for)."""
+    key = (cfg.name, cfg.n_layers, cfg.d_model, max_len)
+    if key not in _STEP_CACHE:
+        decode = jax.jit(
+            lambda p, t, pos, c: model_lib.decode_step(cfg, p, t, pos, c))
+        prefill = jax.jit(
+            lambda p, toks: model_lib.prefill(cfg, p, {"tokens": toks},
+                                              max_len))
+        _STEP_CACHE[key] = (decode, prefill)
+    return _STEP_CACHE[key]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int = 16
+    t_submit: float = 0.0
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    tokens: List[int] = field(default_factory=list)
+
+    @property
+    def latency_ms(self) -> float:
+        return 1e3 * ((self.t_done or time.time()) - self.t_submit)
+
+
+class ServingInstance:
+    """One replica: weights + a fixed-slot batched KV cache."""
+
+    _ids = 0
+
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4,
+                 max_len: int = 512):
+        ServingInstance._ids += 1
+        self.iid = ServingInstance._ids
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = model_lib.init_cache(cfg, slots, max_len)
+        self.pos = np.zeros(slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.last_token = np.zeros(slots, np.int32)
+        self._decode, self._prefill = _jitted_steps(cfg, max_len)
+
+    # -- slot management ---------------------------------------------------
+
+    def free_slots(self) -> int:
+        return sum(1 for r in self.active if r is None)
+
+    def n_active(self) -> int:
+        return self.slots - self.free_slots()
+
+    def admit(self, req: Request) -> bool:
+        """Prefill `req` into a free slot (one-request prefill, cache rows
+        spliced into the batched cache)."""
+        try:
+            slot = self.active.index(None)
+        except ValueError:
+            return False
+        toks = jnp.asarray(req.prompt[None, :])
+        logits, cache1 = self._prefill(self.params, toks)
+        tok0 = int(jnp.argmax(logits[0]))
+        req.tokens.append(tok0)
+        req.t_first_token = time.time()
+        self.cache = _splice_cache(self.cache, cache1, slot)
+        self.pos[slot] = len(req.prompt)
+        self.last_token[slot] = tok0
+        self.active[slot] = req
+        return True
+
+    def step(self) -> List[Request]:
+        """One decode step over all slots; returns finished requests."""
+        if self.n_active() == 0:
+            return []
+        toks = jnp.asarray(self.last_token)
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, toks, pos,
+                                          self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        done = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.tokens.append(int(nxt[s]))
+            self.pos[s] += 1
+            self.last_token[s] = nxt[s]
+            if len(req.tokens) >= req.max_new or self.pos[s] >= \
+                    self.max_len - 1:
+                req.t_done = time.time()
+                done.append(req)
+                self.active[s] = None
+        return done
+
+
+def _splice_cache(full, one, slot: int):
+    """Copy the single-request cache `one` (batch=1) into row `slot` of the
+    batched cache, leaf by leaf.  Batch axis = 0 for plain leaves, 1 for
+    body-stacked leaves (leading period axis)."""
+    def leaf(f, o):
+        if f.ndim == o.ndim and f.shape[1:] == o.shape[1:]:
+            return f.at[slot: slot + 1].set(o)           # batch axis 0
+        return f.at[:, slot: slot + 1].set(o)            # stacked: axis 1
+    return jax.tree.map(leaf, full, one)
+
+
+class ServingEngine:
+    """Per-function pool of instances + router with saturated/cached
+    split (dual-staged scaling's data plane): requests go only to
+    *saturated* instances; cached instances retain state but receive no
+    traffic until a logical cold start re-labels them."""
+
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.instances: Dict[int, ServingInstance] = {}
+        self.cached: set = set()          # iids drained by "release"
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self._rr = 0
+
+    # -- control-plane hooks (called by the Jiagu autoscaler/scheduler) ----
+
+    def scale_up(self, k: int = 1, init_delay_s: float = 0.0) -> List[int]:
+        out = []
+        for _ in range(k):
+            inst = ServingInstance(self.cfg, self.params, self.slots,
+                                   self.max_len)
+            self.instances[inst.iid] = inst
+            out.append(inst.iid)
+        return out
+
+    def release(self, k: int = 1) -> List[int]:
+        """Drain k saturated instances (dual-staged stage 1)."""
+        sat = [i for i in self.instances if i not in self.cached]
+        picked = sat[:k]
+        self.cached.update(picked)
+        return picked
+
+    def logical_start(self, k: int = 1) -> int:
+        """Re-route to k cached instances (<1 ms; no init cost)."""
+        revived = list(self.cached)[:k]
+        for i in revived:
+            self.cached.discard(i)
+        return len(revived)
+
+    def evict_cached(self, k: int = 1) -> int:
+        victims = list(self.cached)[:k]
+        for i in victims:
+            self.cached.discard(i)
+            self.instances.pop(i, None)
+        return len(victims)
+
+    def n_saturated(self) -> int:
+        return len(self.instances) - len(self.cached)
+
+    # -- data plane ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.t_submit = time.time()
+        self.queue.append(req)
+
+    def tick(self):
+        """Admit queued requests round-robin over saturated instances,
+        then advance every instance one decode step."""
+        sat = [inst for iid, inst in sorted(self.instances.items())
+               if iid not in self.cached]
+        if sat:
+            while self.queue:
+                order = sorted(sat, key=lambda i: -i.free_slots())
+                if order[0].free_slots() == 0:
+                    break
+                order[0].admit(self.queue.pop(0))
+        for inst in sat:
+            self.done.extend(inst.step())
+
+    def drain(self, max_ticks: int = 1000):
+        for _ in range(max_ticks):
+            if not self.queue and all(i.n_active() == 0
+                                      for i in self.instances.values()):
+                break
+            self.tick()
+        return self.done

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src layout import path (tests run with or without PYTHONPATH=src)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (the dry-run sets its own flag in-process).

@@ -1,0 +1,204 @@
+"""Jiagu core: cluster invariants (hypothesis), capacity semantics,
+scheduler fast/slow paths, and baseline scheduler constraints."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Cluster, GroundTruth, JiaguScheduler, K8sScheduler,
+                        NodeResources, OwlScheduler, PerfPredictor,
+                        ProfileStore, QoSStore, capacity_of,
+                        generate_dataset, synthetic_functions,
+                        update_capacity_table)
+from repro.core.cluster import Node
+
+
+# ---------------------------------------------------------------------------
+# Cluster state machine properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["deploy", "release",
+                                               "logical", "evict_c",
+                                               "evict_s"]),
+                              st.integers(1, 3)), max_size=40))
+def test_node_counts_never_negative_and_conserved(ops):
+    node = Node(NodeResources())
+    deployed = 0
+    for op, k in ops:
+        st_ = node.state("f")
+        before = (st_.n_sat, st_.n_cached)
+        if op == "deploy":
+            node.deploy("f", k)
+            deployed += k
+        elif op == "release":
+            node.release("f", k)
+        elif op == "logical":
+            node.logical_start("f", k)
+        elif op == "evict_c":
+            node.evict_cached("f", k)
+        else:
+            node.evict_sat("f", k)
+        if "f" in node.funcs:
+            st_ = node.funcs["f"]
+            assert st_.n_sat >= 0 and st_.n_cached >= 0
+            # release/logical conserve the total
+            if op in ("release", "logical"):
+                assert st_.n_sat + st_.n_cached == sum(before)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 5))
+def test_release_is_inverse_of_logical_start(k):
+    node = Node(NodeResources())
+    node.deploy("f", 5)
+    got = node.release("f", k)
+    assert got == min(k, 5)
+    back = node.logical_start("f", got)
+    assert back == got
+    assert node.funcs["f"].n_sat == 5 and node.funcs["f"].n_cached == 0
+
+
+def test_deploy_staleness_semantics():
+    """Deploying f marks OTHER functions' capacity entries stale; releases
+    keep them fresh (capacity can only have grown)."""
+    from repro.core.cluster import CapEntry
+    node = Node(NodeResources())
+    node.deploy("a", 1)
+    node.table["a"] = CapEntry(capacity=4)
+    node.table["b"] = CapEntry(capacity=4)
+    node.deploy("b", 1)
+    assert not node.table["a"].fresh
+    assert node.table["b"].fresh
+    node.table["a"].fresh = True
+    node.release("b", 1)
+    assert node.table["a"].fresh
+
+
+# ---------------------------------------------------------------------------
+# Capacity (needs a trained predictor — small but real)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def world():
+    specs = synthetic_functions(4, seed=2)
+    gt = GroundTruth(seed=0)
+    store = ProfileStore(seed=0)
+    qos = QoSStore(store, gt)
+    pred = PerfPredictor(n_trees=12, max_depth=7, seed=0)
+    X, y = generate_dataset(specs, gt, store, qos, 600, seed=1)
+    pred.add_dataset(X, y)
+    return specs, gt, store, qos, pred
+
+
+def test_capacity_positive_on_empty_node(world):
+    specs, gt, store, qos, pred = world
+    fn = sorted(specs)[0]
+    cap, rows = capacity_of(pred, store, qos, specs, {}, fn, m_max=12)
+    assert cap >= 1          # a function alone on a node must fit
+    assert rows == 12        # m_max rows, one batched inference
+
+
+def test_capacity_monotone_in_neighbor_load(world):
+    """More neighbor instances can never increase predicted capacity."""
+    specs, gt, store, qos, pred = world
+    fns = sorted(specs)
+    f, g = fns[0], fns[1]
+    caps = []
+    for n_g in [0, 4, 10]:
+        coloc = {g: (float(n_g), 0.0)} if n_g else {}
+        cap, _ = capacity_of(pred, store, qos, specs, coloc, f, m_max=16)
+        caps.append(cap)
+    assert caps[0] >= caps[1] >= caps[2]
+
+
+def test_update_capacity_table_covers_all_functions(world):
+    specs, gt, store, qos, pred = world
+    node = Node(NodeResources())
+    fns = sorted(specs)[:3]
+    for fn in fns:
+        node.deploy(fn, 2)
+    update_capacity_table(pred, store, qos, specs, node, m_max=8)
+    for fn in fns:
+        assert fn in node.table and node.table[fn].fresh
+
+
+# ---------------------------------------------------------------------------
+# Schedulers
+# ---------------------------------------------------------------------------
+
+
+def test_k8s_never_overcommits_requested_resources(world):
+    specs, gt, store, qos, pred = world
+    cluster = Cluster(specs)
+    sched = K8sScheduler(cluster, store, qos)
+    fns = sorted(specs)
+    for i in range(40):
+        sched.schedule(fns[i % len(fns)], 1, float(i))
+    for node in cluster.nodes.values():
+        assert node.cpu_requested(specs) <= node.res.cpu_mcores
+        assert node.mem_used(specs) <= node.res.mem_mb
+
+
+def test_owl_max_two_functions_per_node(world):
+    specs, gt, store, qos, pred = world
+    cluster = Cluster(specs)
+    sched = OwlScheduler(cluster, store, qos)
+    fns = sorted(specs)
+    for i in range(30):
+        sched.schedule(fns[i % len(fns)], 1, float(i))
+    for node in cluster.nodes.values():
+        assert len([f for f, s in node.funcs.items() if s.total > 0]) <= 2
+
+
+def test_jiagu_fast_path_after_slow_path(world):
+    """First instance of a function on a node = slow path; subsequent
+    co-located instances under capacity = fast path, no inference."""
+    specs, gt, store, qos, pred = world
+    cluster = Cluster(specs)
+    sched = JiaguScheduler(cluster, store, qos, pred, m_max=12)
+    fn = sorted(specs)[0]
+    sched.schedule(fn, 1, 0.0)
+    assert sched.metrics.slow >= 1
+    calls_before = pred.inference_calls
+    slow_before = sched.metrics.slow
+    sched.on_tick(10.0)      # flush async update
+    calls_after_update = pred.inference_calls
+    sched.schedule(fn, 1, 11.0)
+    assert sched.metrics.fast >= 1
+    assert sched.metrics.slow == slow_before      # no new slow path
+    assert pred.inference_calls == calls_after_update  # fast path: 0 calls
+    assert calls_after_update > calls_before  # async update did the work
+
+
+def test_jiagu_batches_concurrent_arrivals(world):
+    """Concurrency-aware scheduling: k co-arriving instances of one
+    function are one decision."""
+    specs, gt, store, qos, pred = world
+    cluster = Cluster(specs)
+    sched = JiaguScheduler(cluster, store, qos, pred, m_max=12)
+    fn = sorted(specs)[0]
+    sched.schedule(fn, 1, 0.0)
+    sched.on_tick(10.0)
+    node = next(iter(cluster.nodes.values()))
+    cap = node.table[fn].capacity
+    if cap >= 3:
+        decisions_before = sched.metrics.decisions
+        placements = sched.schedule(fn, 2, 11.0)
+        assert sched.metrics.decisions == decisions_before + 1
+        assert sum(p.count for p in placements) == 2
+
+
+def test_jiagu_respects_memory_hard_limit(world):
+    """Overcommit never violates the non-overcommittable memory."""
+    specs, gt, store, qos, pred = world
+    cluster = Cluster(specs)
+    sched = JiaguScheduler(cluster, store, qos, pred, m_max=24)
+    fns = sorted(specs)
+    for i in range(60):
+        sched.schedule(fns[i % len(fns)], 1, float(i))
+        sched.on_tick(float(i) + 0.5)
+    for node in cluster.nodes.values():
+        assert node.mem_used(specs) <= node.res.mem_mb

@@ -1,0 +1,191 @@
+"""Per-arch smoke tests: every assigned architecture instantiates a
+reduced config, runs a forward/train step (shapes + finiteness), and the
+decode path is consistent with the full-sequence forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (InputShape, SHAPES, cell_is_runnable,
+                                get_config, get_smoke_config, list_archs)
+from repro.models import model as model_lib
+from repro.models import steps as steps_lib
+
+ARCHS = list_archs()
+SMOKE_SHAPE = InputShape("smoke", 64, 2, "train")
+
+
+def _params(cfg, seed=0):
+    return model_lib.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = _params(cfg)
+    batch = steps_lib.make_train_batch(cfg, SMOKE_SHAPE)
+    logits = model_lib.forward(cfg, params, batch)
+    B = SMOKE_SHAPE.global_batch
+    S = SMOKE_SHAPE.seq_len
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab_size
+    assert logits.shape[1] == S  # frontends add+consume their own tokens
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_loss_finite_and_grads_flow(arch):
+    cfg = get_smoke_config(arch)
+    params = _params(cfg)
+    batch = steps_lib.make_train_batch(cfg, SMOKE_SHAPE)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: steps_lib.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if not get_config(a).encoder_only])
+def test_prefill_decode_matches_forward(arch):
+    """Teacher forcing: prefill(S0) + decode of the next tokens must match
+    the full forward logits at those positions."""
+    cfg = get_smoke_config(arch)
+    params = _params(cfg)
+    B, S0, n_dec = 2, 24, 4
+    S = S0 + n_dec
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(rng.standard_normal(
+            (B, cfg.n_frontend_tokens, cfg.frontend_dim)), jnp.float32)
+    full = model_lib.forward(cfg, params, batch).astype(jnp.float32)
+    n_front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+
+    pre_batch = {k: (v[:, :S0] if k == "tokens" else v)
+                 for k, v in batch.items()}
+    logits0, cache = model_lib.prefill(cfg, params, pre_batch, S + n_front)
+    # MoE archs: full-sequence forward can DROP tokens at expert capacity
+    # while single-token decode never does — an intrinsic train/serve
+    # semantic difference of capacity-based MoE, so tolerances widen.
+    tol = 2.5e-2 if cfg.moe is not None else 5e-3
+    np.testing.assert_allclose(
+        np.asarray(logits0, np.float32),
+        np.asarray(full[:, n_front + S0 - 1], np.float32),
+        atol=tol, rtol=tol)
+
+    for i in range(n_dec - 1):
+        pos = jnp.full((B,), S0 + i, jnp.int32) + n_front
+        lg, cache = model_lib.decode_step(cfg, params,
+                                          jnp.asarray(toks[:, S0 + i]),
+                                          pos, cache)
+        np.testing.assert_allclose(
+            np.asarray(lg, np.float32),
+            np.asarray(full[:, n_front + S0 + i], np.float32),
+            atol=tol, rtol=tol)
+
+
+def test_full_configs_match_assignment_table():
+    """Exact dims from the assignment (one assert per row)."""
+    t = {
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    }
+    for arch, (L, d, H, kv, dff, V) in t.items():
+        cfg = get_config(arch)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff if cfg.moe is None or arch.startswith("deepseek")
+               else cfg.d_ff, cfg.vocab_size)
+        if arch == "deepseek-v2-236b":
+            got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                   cfg.moe.d_ff_expert, cfg.vocab_size)
+        if arch == "mamba2-2.7b":
+            got = (cfg.n_layers, cfg.d_model, 0, 0, 0, cfg.vocab_size)
+        assert got == (L, d, H, kv, dff, V), (arch, got)
+    assert get_config("deepseek-v2-236b").moe.n_experts == 160
+    assert get_config("deepseek-v2-236b").moe.top_k == 6
+    assert get_config("llama4-maverick-400b-a17b").moe.n_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").moe.top_k == 1
+    assert get_config("mamba2-2.7b").ssd.d_state == 128
+    assert get_config("gemma-7b").resolved_head_dim() == 256
+
+
+def test_cell_skips_match_design():
+    skipped = {(a, s.name) for a in ARCHS for s in SHAPES
+               if not cell_is_runnable(get_config(a), s)[0]}
+    want = {("hubert-xlarge", "decode_32k"), ("hubert-xlarge", "long_500k"),
+            ("deepseek-v2-236b", "long_500k"), ("gemma-7b", "long_500k"),
+            ("qwen1.5-110b", "long_500k"), ("internvl2-2b", "long_500k")}
+    assert skipped == want
+
+
+def test_param_count_analytic_vs_actual():
+    """Analytic param_count matches the real init tree within ~1%."""
+    for arch in ["gemma2-2b", "mamba2-2.7b", "recurrentgemma-2b",
+                 "deepseek-v2-236b"]:
+        cfg = get_smoke_config(arch)
+        params = _params(cfg)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.02, (
+            arch, actual, analytic)
+
+
+def test_moe_dispatch_methods_agree():
+    """einsum (GShard), grouped gshard and sort dispatch agree on kept
+    tokens."""
+    cfg = get_smoke_config("deepseek-v2-236b")
+    params = _params(cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32)
+    outs = {}
+    for d in ["einsum", "sort", "gshard:1", "gshard:2", "sortg:1",
+              "sortg:4"]:
+        outs[d] = np.asarray(
+            model_lib.forward(cfg, params, {"tokens": toks}, dispatch=d),
+            np.float32)
+    np.testing.assert_allclose(outs["einsum"], outs["sort"], atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(outs["einsum"], outs["gshard:1"], atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(outs["einsum"], outs["sortg:1"], atol=2e-3,
+                               rtol=2e-3)
+    # grouped variants use per-group capacity: match when not binding
+    np.testing.assert_allclose(outs["einsum"], outs["sortg:4"], atol=2e-2,
+                               rtol=2e-2)
+    # grouped capacity differs per group; agreement holds when capacity
+    # is not binding (tiny batch): still require close match
+    np.testing.assert_allclose(outs["einsum"], outs["gshard:2"], atol=2e-2,
+                               rtol=2e-2)
+
+
+def test_long_context_ring_buffer_local_attention():
+    """Decode past the local window uses the ring cache correctly:
+    compare against a fresh prefill of the trailing window."""
+    cfg = get_smoke_config("gemma2-2b")  # local/global alternating
+    params = _params(cfg)
+    B, W = 1, cfg.window
+    rng = np.random.default_rng(1)
+    S = W * 3  # run well past the window
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    full = model_lib.forward(cfg, params,
+                             {"tokens": jnp.asarray(toks)})
+    logits0, cache = model_lib.prefill(
+        cfg, params, {"tokens": jnp.asarray(toks[:, :S - 8])}, S)
+    lg = logits0
+    for i in range(S - 8, S):
+        lg, cache = model_lib.decode_step(
+            cfg, params, jnp.asarray(toks[:, i]),
+            jnp.full((B,), i, jnp.int32), cache)
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               atol=5e-3, rtol=5e-3)

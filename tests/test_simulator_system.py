@@ -1,0 +1,111 @@
+"""End-to-end system behaviour: the full Jiagu stack vs baselines on
+short traces — density ordering, QoS, fast-path dominance (paper §7)."""
+import numpy as np
+import pytest
+
+from repro.core import (Autoscaler, Cluster, GroundTruth, GsightScheduler,
+                        JiaguScheduler, K8sScheduler, PerfPredictor,
+                        ProfileStore, QoSStore, ScalingConfig, SimConfig,
+                        Simulation, generate_dataset, realworld_trace,
+                        synthetic_functions, timer_trace)
+
+
+@pytest.fixture(scope="module")
+def world():
+    specs = synthetic_functions(4, seed=7)
+    gt = GroundTruth(seed=0)
+    store = ProfileStore(seed=0)
+    qos = QoSStore(store, gt)
+    pred = PerfPredictor(n_trees=12, max_depth=7, seed=0)
+    X, y = generate_dataset(specs, gt, store, qos, 800, seed=2)
+    pred.add_dataset(X, y)
+    return specs, gt, store, qos, pred
+
+
+def _run(world, sched_name, trace, dual=True, release_s=20,
+         keepalive_s=60.0):
+    specs, gt, store, qos, pred = world
+    cluster = Cluster(specs)
+    if sched_name == "jiagu":
+        sched = JiaguScheduler(cluster, store, qos, pred, m_max=12)
+    elif sched_name == "gsight":
+        sched = GsightScheduler(cluster, store, qos, pred)
+    else:
+        sched = K8sScheduler(cluster, store, qos)
+    aut = Autoscaler(cluster, sched, ScalingConfig(
+        release_s=release_s, keepalive_s=keepalive_s,
+        dual_staged=dual and sched_name == "jiagu"))
+    sim = Simulation(specs, trace, sched, aut, gt, store, qos,
+                     predictor=pred if sched_name != "k8s" else None,
+                     cfg=SimConfig(collect_samples=False))
+    return sim.run()
+
+
+@pytest.fixture(scope="module")
+def paper_world():
+    """The six ServerlessBench/FunctionBench workloads (the Fig-13
+    world, where users over-provision heavily)."""
+    from repro.core import BENCH_FUNCTIONS
+    specs = dict(BENCH_FUNCTIONS)
+    gt = GroundTruth(seed=0)
+    store = ProfileStore(seed=0)
+    qos = QoSStore(store, gt)
+    pred = PerfPredictor(n_trees=16, max_depth=8, seed=0)
+    X, y = generate_dataset(specs, gt, store, qos, 1200, seed=2)
+    pred.add_dataset(X, y)
+    return specs, gt, store, qos, pred
+
+
+def test_jiagu_densier_than_k8s_with_acceptable_qos(paper_world):
+    trace = realworld_trace(sorted(paper_world[0]), duration_s=400,
+                            seed=11)
+    r_j = _run(paper_world, "jiagu", trace)
+    r_k = _run(paper_world, "k8s", trace)
+    assert r_j.density > r_k.density * 1.1    # overcommitment wins
+    assert r_j.qos_violation_rate < 0.10      # paper's acceptance bar
+    assert r_k.qos_violation_rate < 0.10      # baseline world is sane
+
+
+def test_fast_path_dominates_on_timer_trace(world):
+    """Paper §7.2 best case: >80% of schedulings go through the fast
+    path."""
+    fn = sorted(world[0])[0]
+    spec = world[0][fn]
+    trace = timer_trace(fn, duration_s=600, period_s=60,
+                        rps_per_inst=spec.saturated_rps)
+    r = _run(world, "jiagu", trace, dual=False, keepalive_s=30.0)
+    s = r.sched
+    assert s.fast / max(s.fast + s.slow, 1) > 0.7
+    assert s.slow <= 2                      # only the very first arrival
+    assert s.mean_latency_ms < 5.0
+
+
+def test_jiagu_fewer_inferences_than_gsight(world):
+    trace = realworld_trace(sorted(world[0]), duration_s=300, seed=13)
+    r_j = _run(world, "jiagu", trace, dual=False)
+    r_g = _run(world, "gsight", trace)
+    # critical-path inference rows per placed instance
+    jiagu_rows = r_j.sched.critical_inference_rows / max(
+        r_j.sched.instances_placed, 1)
+    gsight_rows = r_g.sched.critical_inference_rows / max(
+        r_g.sched.instances_placed, 1)
+    assert jiagu_rows < gsight_rows
+
+
+def test_dual_staged_improves_density(world):
+    trace = realworld_trace(sorted(world[0]), duration_s=400, seed=17)
+    r_ds = _run(world, "jiagu", trace, dual=True, release_s=15)
+    r_no = _run(world, "jiagu", trace, dual=False)
+    assert r_ds.density >= r_no.density * 0.98  # = or better
+    assert r_ds.scaling.logical_cold_starts >= 0
+    assert r_ds.scaling.releases > 0
+
+
+def test_simulation_accounting_consistent(world):
+    trace = realworld_trace(sorted(world[0]), duration_s=200, seed=19)
+    r = _run(world, "jiagu", trace)
+    assert r.requests > 0
+    assert 0 <= r.qos_violation_rate <= 1
+    assert r.instance_seconds >= r.node_seconds  # >=1 instance per node
+    for fn, v in r.per_fn_violations.items():
+        assert v <= r.per_fn_requests[fn] + 1e-6
