@@ -1,0 +1,150 @@
+"""Cluster-scale capacity-solve scaling study: legacy per-node path vs
+the CapacityEngine (coalesced + cached + vectorized), 24 -> 512 nodes.
+
+Each cluster size is populated with nodes drawn from a fixed pool of
+colocation patterns — the regime a real fleet is in, where most nodes
+look like a few dozen archetypes.  For each size we drain the whole
+cluster's capacity tables twice per path:
+
+  * legacy  — ``update_capacity_table`` node by node (one predictor call
+              per (node, function), Python row assembly, full m-sweep)
+  * engine  — ``CapacityEngine.update_nodes`` (one coalesced drain:
+              a handful of batched predictor calls, signature cache,
+              vectorized assembly, chunked early-exit m-sweep)
+
+and assert the resulting capacity tables are identical.  The second
+(warm) engine drain shows the steady-state cost once the signature cache
+is populated.  Acceptance target: >= 5x wall-time AND predictor-call
+reduction at 256 nodes, tables equal.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import build_world, emit, save_artifact
+
+from repro.core import update_capacity_table
+from repro.core.cluster import Node
+from repro.core.interference import NodeResources
+from repro.engine import CapacityEngine, EngineConfig
+
+M_MAX = 16
+N_PATTERNS = 24
+
+
+def _pattern_pool(specs, rng, n_patterns: int):
+    names = sorted(specs)
+    pool = []
+    for _ in range(n_patterns):
+        k = int(rng.integers(1, 4))
+        pat = {}
+        for g in rng.choice(names, size=k, replace=False):
+            pat[g] = (int(rng.integers(1, 6)), int(rng.integers(0, 3)))
+        pool.append(pat)
+    return pool
+
+
+def _build_nodes(specs, n_nodes: int, seed: int):
+    rng = np.random.default_rng(seed)
+    pool = _pattern_pool(specs, rng, N_PATTERNS)
+    nodes = []
+    for _ in range(n_nodes):
+        node = Node(NodeResources())
+        for g, (ns, nc) in pool[rng.integers(len(pool))].items():
+            node.state(g).n_sat = ns
+            node.state(g).n_cached = nc
+        nodes.append(node)
+    return nodes
+
+
+def _tables(nodes):
+    return [sorted((fn, e.capacity) for fn, e in n.table.items())
+            for n in nodes]
+
+
+def _clear(nodes):
+    for n in nodes:
+        n.table.clear()
+
+
+def run(quick: bool = False):
+    world = build_world(n_synthetic=6)
+    pred = world.predictor
+    sizes = [24, 128, 256] if quick else [24, 64, 128, 256, 512]
+    rows = []
+    for n_nodes in sizes:
+        nodes = _build_nodes(world.specs, n_nodes, seed=n_nodes)
+
+        # -- legacy: per-node, per-function solves ---------------------
+        calls0, rows0 = pred.inference_calls, pred.inference_count
+        t0 = time.perf_counter()
+        for node in nodes:
+            update_capacity_table(pred, world.store, world.qos,
+                                  world.specs, node, m_max=M_MAX)
+        legacy_s = time.perf_counter() - t0
+        legacy_calls = pred.inference_calls - calls0
+        legacy_rows = pred.inference_count - rows0
+        ref = _tables(nodes)
+        _clear(nodes)
+
+        # -- engine: one coalesced drain, cold cache -------------------
+        engine = CapacityEngine(pred, world.store, world.qos, world.specs,
+                                EngineConfig(m_max=M_MAX))
+        calls0, rows0 = pred.inference_calls, pred.inference_count
+        t0 = time.perf_counter()
+        engine.update_nodes(nodes, m_max=M_MAX)
+        engine_s = time.perf_counter() - t0
+        engine_calls = pred.inference_calls - calls0
+        engine_rows = pred.inference_count - rows0
+        got = _tables(nodes)
+        assert got == ref, f"capacity tables diverged at {n_nodes} nodes"
+        _clear(nodes)
+
+        # -- engine again: warm signature cache ------------------------
+        t0 = time.perf_counter()
+        engine.update_nodes(nodes, m_max=M_MAX)
+        warm_s = time.perf_counter() - t0
+        assert _tables(nodes) == ref, "warm-cache tables diverged"
+
+        rows.append({
+            "nodes": n_nodes,
+            "scenarios": sum(len(t) for t in ref),
+            "legacy_ms": round(legacy_s * 1e3, 2),
+            "engine_ms": round(engine_s * 1e3, 2),
+            "warm_ms": round(warm_s * 1e3, 2),
+            "speedup": round(legacy_s / max(engine_s, 1e-9), 2),
+            "warm_speedup": round(legacy_s / max(warm_s, 1e-9), 2),
+            "legacy_calls": legacy_calls,
+            "engine_calls": engine_calls,
+            "call_reduction": round(legacy_calls / max(engine_calls, 1), 1),
+            "legacy_rows": legacy_rows,
+            "engine_rows": engine_rows,
+            "unique_solves": engine.stats.unique_solves,
+            "cache_hits": engine.stats.cache_hits,
+            "coalesced_dupes": engine.stats.coalesced_dupes,
+            "tables_equal": True,
+        })
+        emit(rows[-1:])
+
+    save_artifact("capacity_engine_scaling", {"m_max": M_MAX,
+                                              "n_patterns": N_PATTERNS,
+                                              "rows": rows})
+    at256 = [r for r in rows if r["nodes"] == 256]
+    if at256:
+        r = at256[0]
+        ok = r["speedup"] >= 5.0 and r["call_reduction"] >= 5.0
+        print(f"# 256-node acceptance: speedup={r['speedup']}x "
+              f"calls {r['legacy_calls']}->{r['engine_calls']} "
+              f"({r['call_reduction']}x) tables_equal={r['tables_equal']} "
+              f"=> {'PASS' if ok else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -9,6 +9,7 @@
 | Fig 13 normalized density               | density           |
 | Fig 14 QoS violations + reduced starts  | qos_coldstart     |
 | Fig 15/16/17 prediction + model zoo     | prediction        |
+| capacity-engine scaling (24->512 nodes) | capacity_engine   |
 | kernel/arch microbench                  | model_perf        |
 | §Roofline table (reads dry-run JSONs)   | roofline_report   |
 """
@@ -25,8 +26,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (density, model_perf, prediction, qos_coldstart,
-                   roofline_report, scheduling_cost)
+    from . import (capacity_engine, density, model_perf, prediction,
+                   qos_coldstart, roofline_report, scheduling_cost)
     suites = [
         ("scheduling_cost", lambda: scheduling_cost.run(
             duration=300 if args.quick else 600, quick=args.quick)),
@@ -35,6 +36,7 @@ def main() -> None:
         ("qos_coldstart", lambda: qos_coldstart.run(
             duration=300 if args.quick else 600, quick=args.quick)),
         ("prediction", lambda: prediction.run(quick=args.quick)),
+        ("capacity_engine", lambda: capacity_engine.run(quick=args.quick)),
         ("model_perf", lambda: model_perf.run(quick=args.quick)),
         ("roofline_report", lambda: roofline_report.run()),
     ]

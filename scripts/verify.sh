@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the exact command the roadmap pins.
+#   scripts/verify.sh            full suite
+#   scripts/verify.sh tests/...  any extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -3,6 +3,8 @@ paper's contribution), the RFR predictor, the cluster simulator, and the
 K8s/Gsight/Owl baselines."""
 from .autoscaler import Autoscaler, ScalingConfig, ScalingMetrics
 from .capacity import QOS_MULT, QoSStore, capacity_of, update_capacity_table
+from .capacity_engine import (CapacityEngine, EngineConfig, EngineStats,
+                              coloc_signature)
 from .cluster import CapEntry, Cluster, FuncState, Node
 from .interference import GroundTruth, NodeResources
 from .predictor import (MODEL_ZOO, PerfPredictor, RandomForestRegressor,
@@ -18,6 +20,7 @@ from .traces import Trace, flip_trace, realworld_suite, realworld_trace, \
 
 __all__ = [
     "Autoscaler", "ScalingConfig", "ScalingMetrics", "QOS_MULT", "QoSStore",
+    "CapacityEngine", "EngineConfig", "EngineStats", "coloc_signature",
     "capacity_of", "update_capacity_table", "CapEntry", "Cluster",
     "FuncState", "Node", "GroundTruth", "NodeResources", "MODEL_ZOO",
     "PerfPredictor", "RandomForestRegressor", "build_features",

@@ -235,6 +235,19 @@ class Autoscaler:
 
     # -- on-demand migration (paper §5) ---------------------------------
 
+    def _node_capacity(self, node: Node, fn: str) -> Optional[int]:
+        """Best known capacity of fn on node: the capacity-table entry,
+        else a zero-cost CapacityEngine cache hit (nodes that share a
+        colocation signature with an already-solved node get an answer
+        without any inference), else None."""
+        entry = node.table.get(fn)
+        if entry is not None:
+            return entry.capacity
+        engine = getattr(self.scheduler, "engine", None)
+        if engine is None:
+            return None
+        return engine.capacity_hint(engine.node_coloc(node), fn)
+
     def _migrate(self, now: float):
         """Move cached instances off nodes where they could no longer be
         re-saturated (n_sat + n_cached > capacity), hiding the real cold
@@ -247,13 +260,13 @@ class Autoscaler:
             all_cached = all(s.n_sat == 0 for s in node.funcs.values()) \
                 and node.n_instances() > 0
             for fn, st in list(node.funcs.items()):
-                entry = node.table.get(fn)
                 if st.n_cached == 0:
                     continue
+                cap = self._node_capacity(node, fn)
                 if all_cached:
                     k = st.n_cached
-                elif entry is not None:
-                    excess = st.n_sat + st.n_cached - entry.capacity
+                elif cap is not None:
+                    excess = st.n_sat + st.n_cached - cap
                     if excess <= 0:
                         continue
                     k = min(excess, st.n_cached)
@@ -275,11 +288,11 @@ class Autoscaler:
                            key=lambda n: -n.funcs[fn].n_sat):
             if node.id == src.id:
                 continue
-            entry = node.table.get(fn)
-            if entry is None:
+            cap = self._node_capacity(node, fn)
+            if cap is None:
                 continue
             st = node.funcs[fn]
-            if (entry.capacity - st.n_sat - st.n_cached >= k
+            if (cap - st.n_sat - st.n_cached >= k
                     and self.cluster.mem_headroom(node, fn) >= k):
                 return node
         return None

@@ -97,9 +97,16 @@ def capacity_of(predictor: PerfPredictor, store: ProfileStore,
 
 def update_capacity_table(predictor: PerfPredictor, store: ProfileStore,
                           qos: QoSStore, specs: Dict[str, FunctionSpec],
-                          node: Node, m_max: int = M_MAX_DEFAULT) -> int:
+                          node: Node, m_max: int = M_MAX_DEFAULT,
+                          engine=None) -> int:
     """Recompute every entry of a node's capacity table (the asynchronous
-    update).  Returns the number of inference rows used."""
+    update).  Returns the number of inference rows used.
+
+    When a ``CapacityEngine`` is supplied the solve is delegated to it
+    (cached + coalesced + vectorized); the legacy per-function loop below
+    is the reference implementation the engine is tested against."""
+    if engine is not None:
+        return engine.update_node(node, m_max)
     from .cluster import CapEntry
     coloc = {g: (float(s.n_sat), float(s.n_cached))
              for g, s in node.funcs.items() if s.total > 0}

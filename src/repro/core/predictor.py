@@ -295,6 +295,18 @@ class PerfPredictor:
         self.inference_count += len(X)
         return out
 
+    def predict_many(self, Xs: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """Score several feature matrices in ONE batched inference call
+        (the multi-query API behind the cluster-scale capacity engine:
+        every unresolved scenario of a drain rides the same forest pass).
+        Returns per-matrix prediction arrays."""
+        mats = [np.atleast_2d(x) for x in Xs]
+        if not mats:
+            return []
+        out = self.predict(np.concatenate(mats, axis=0))
+        splits = np.cumsum([len(m) for m in mats])[:-1]
+        return np.split(out, splits)
+
     @property
     def mean_inference_ms(self) -> float:
         return 1e3 * self.inference_time_s / max(self.inference_calls, 1)

@@ -135,10 +135,12 @@ class JiaguScheduler(BaseScheduler):
     name = "jiagu"
 
     def __init__(self, cluster: Cluster, store: ProfileStore, qos: QoSStore,
-                 predictor: PerfPredictor, m_max: int = M_MAX_DEFAULT):
+                 predictor: PerfPredictor, m_max: int = M_MAX_DEFAULT,
+                 engine=None):
         super().__init__(cluster, store, qos)
         self.predictor = predictor
         self.m_max = m_max
+        self.engine = engine    # optional CapacityEngine (batched path)
         self._pending: Dict[int, float] = {}  # node id -> due time
 
     # -- async update machinery -----------------------------------------
@@ -151,6 +153,22 @@ class JiaguScheduler(BaseScheduler):
 
     def on_tick(self, now: float):
         due = [nid for nid, t in self._pending.items() if t <= now]
+        if self.engine is not None:
+            nodes = []
+            for nid in due:
+                self._pending.pop(nid)
+                node = self.cluster.nodes.get(nid)
+                if node is not None:
+                    nodes.append(node)
+            if nodes:
+                # one coalesced drain: every due node's scenarios share
+                # the same batched predictor passes and the engine cache
+                rows = self.engine.update_nodes(nodes, self.m_max)
+                for node in nodes:
+                    node.update_pending_until = -1.0
+                self.metrics.async_inference_rows += rows
+                self.metrics.async_updates += len(nodes)
+            return
         for nid in due:
             self._pending.pop(nid)
             node = self.cluster.nodes.get(nid)
@@ -187,9 +205,13 @@ class JiaguScheduler(BaseScheduler):
         st = node.funcs.get(fn)
         have = st.total if st is not None else 0
         m_cap = min(self.m_max, have + need + 1)
-        cap, rows = capacity_of(self.predictor, self.store, self.qos,
-                                self.cluster.specs, self._coloc_counts(node),
-                                fn, m_cap)
+        if self.engine is not None:
+            cap, rows = self.engine.capacity(self._coloc_counts(node), fn,
+                                             m_cap)
+        else:
+            cap, rows = capacity_of(self.predictor, self.store, self.qos,
+                                    self.cluster.specs,
+                                    self._coloc_counts(node), fn, m_cap)
         ms = (time.perf_counter() - t0) * 1e3
         node.table[fn] = CapEntry(capacity=cap, fresh=cap < m_cap)
         self.metrics.critical_inference_rows += rows

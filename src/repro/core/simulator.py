@@ -31,6 +31,10 @@ class SimConfig:
     collect_samples: bool = True
     sample_every_s: int = 20
     seed: int = 0
+    # capacity-solve path: True attaches a CapacityEngine to a Jiagu
+    # scheduler (coalesced/cached/vectorized cluster-scale solving);
+    # False keeps the legacy per-node reference path.
+    use_capacity_engine: bool = False
 
 
 @dataclass
@@ -82,6 +86,13 @@ class Simulation:
         self.cfg = cfg or SimConfig()
         self.cluster = scheduler.cluster
         self._rng = np.random.default_rng(self.cfg.seed)
+        if (self.cfg.use_capacity_engine and predictor is not None
+                and getattr(scheduler, "engine", None) is None
+                and hasattr(scheduler, "m_max")):
+            from .capacity_engine import CapacityEngine, EngineConfig
+            scheduler.engine = CapacityEngine(
+                predictor, store, qos, specs,
+                EngineConfig(m_max=scheduler.m_max))
 
     # ------------------------------------------------------------------
 

@@ -29,6 +29,16 @@ from ..optim import adamw
 from .sharding import (axis_size, batch_pspecs, cache_shardings, dp_axes,
                        param_shardings)
 
+# Sharding-invariant RNG: without this, jax.random draws inside a jit with
+# sharded out_shardings depend on the output partitioning, so the SAME
+# PRNGKey yields DIFFERENT initial weights on different meshes (observed:
+# body params diverging ~0.33 abs between a (2,2,2) mesh and single
+# device, which then reads as a phantom distributed-numerics bug).
+# Deliberately process-global (it is the upcoming JAX default): every
+# random draw in this repo must use the partitionable stream, or states
+# initialized through different entry points stop agreeing.
+jax.config.update("jax_threefry_partitionable", True)
+
 # ---------------------------------------------------------------------------
 # Abstract trees
 # ---------------------------------------------------------------------------

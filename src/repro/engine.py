@@ -1,0 +1,13 @@
+"""Public export surface for the cluster-scale capacity engine.
+
+    from repro.engine import CapacityEngine, EngineConfig
+
+The engine coalesces all pending capacity solves into batched predictor
+passes, caches results by canonical colocation signature, and assembles
+feature matrices vectorized — see ``repro.core.capacity_engine``.
+"""
+from .core.capacity_engine import (CapacityEngine, EngineConfig,
+                                   EngineStats, coloc_signature)
+
+__all__ = ["CapacityEngine", "EngineConfig", "EngineStats",
+           "coloc_signature"]

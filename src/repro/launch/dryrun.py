@@ -102,7 +102,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    from .roofline import normalize_cost_analysis
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     try:
         mem = compiled.memory_analysis()
         mem_rec = {

@@ -37,6 +37,17 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
+def normalize_cost_analysis(cost) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returned a one-element list of dicts
+    in older JAX and a plain dict in newer releases (and may be None for
+    some backends).  Normalize every variant to a dict."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     b = _DTYPE_BYTES.get(dtype)
     if b is None:

@@ -1,0 +1,86 @@
+"""Minimal deterministic stand-in for `hypothesis` so property tests can
+still collect and run where the real package is unavailable.
+
+Implements just the surface these tests use: ``given`` (keyword
+strategies), ``settings`` (max_examples honored, everything else
+ignored), and the ``strategies`` namespace with ``integers``, ``lists``,
+``tuples`` and ``sampled_from``.  Examples are drawn from a fixed-seed
+generator, so the degraded loop is deterministic across runs — weaker
+than hypothesis (no shrinking, no coverage-guided search) but the same
+assertions run on a few dozen sampled inputs.
+"""
+from __future__ import annotations
+
+import inspect
+import zlib
+from typing import Any, Callable
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 30
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.integers(len(items))])
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda rng: [elem.example(rng)
+                         for _ in range(rng.integers(min_size,
+                                                     max_size + 1))])
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats: _Strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            # settings() may sit above (attribute on wrapper) or below
+            # (copied from fn by functools.wraps) this decorator.
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        # look like the original test, minus the strategy-supplied params
+        # (so pytest does not treat them as fixtures); deliberately no
+        # __wrapped__, which would resurrect the full signature.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__dict__.update(fn.__dict__)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        wrapper._fallback_given = True
+        return wrapper
+    return deco

@@ -1,8 +1,35 @@
 import os
 import sys
 
+import pytest
+
 # src layout import path (tests run with or without PYTHONPATH=src)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # NOTE: no xla_force_host_platform_device_count here — smoke tests and
 # benches must see 1 device (the dry-run sets its own flag in-process).
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tpu_only: real-hardware Pallas path (interpret=False) that the "
+        "CPU interpret mode cannot run; auto-skipped off-TPU")
+
+
+def _on_tpu() -> bool:
+    try:
+        import jax
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def pytest_collection_modifyitems(config, items):
+    if _on_tpu():
+        return
+    skip = pytest.mark.skip(
+        reason="tpu_only: needs real TPU (Pallas interpret=False)")
+    for item in items:
+        if "tpu_only" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,271 @@
+"""CapacityEngine: batched/cached/vectorized solving must be an exact
+drop-in for the legacy per-node path — identical capacities, identical
+feature rows (bitwise), matching inference-row accounting — plus cache
+semantics (hits, signature invalidation, retrain epoch)."""
+import numpy as np
+import pytest
+
+from repro.core import (CapacityEngine, Cluster, EngineConfig, GroundTruth,
+                        JiaguScheduler, NodeResources, PerfPredictor,
+                        ProfileStore, QoSStore, capacity_of,
+                        coloc_signature, generate_dataset,
+                        synthetic_functions, update_capacity_table)
+from repro.core.capacity import _neighbor_feats
+from repro.core.capacity_engine import _Template
+from repro.core.cluster import Node
+from repro.core.predictor import build_features
+from repro.engine import CapacityEngine as EngineViaSurface
+
+
+@pytest.fixture(scope="module")
+def world():
+    specs = synthetic_functions(5, seed=2)
+    gt = GroundTruth(seed=0)
+    store = ProfileStore(seed=0)
+    qos = QoSStore(store, gt)
+    pred = PerfPredictor(n_trees=12, max_depth=7, seed=0)
+    X, y = generate_dataset(specs, gt, store, qos, 700, seed=1)
+    pred.add_dataset(X, y)
+    return specs, gt, store, qos, pred
+
+
+def _engine(world, **kw):
+    specs, gt, store, qos, pred = world
+    return CapacityEngine(pred, store, qos, specs,
+                          EngineConfig(**kw) if kw else None)
+
+
+def _random_nodes(specs, rng, n_nodes, n_patterns=4):
+    """Nodes drawn from a small pool of load patterns (as large clusters
+    are in practice), so signature sharing actually occurs."""
+    names = sorted(specs)
+    patterns = []
+    for _ in range(n_patterns):
+        k = int(rng.integers(1, 4))
+        pat = {}
+        for g in rng.choice(names, size=k, replace=False):
+            pat[g] = (int(rng.integers(1, 5)), int(rng.integers(0, 3)))
+        patterns.append(pat)
+    nodes = []
+    for _ in range(n_nodes):
+        node = Node(NodeResources())
+        for g, (ns, nc) in patterns[rng.integers(n_patterns)].items():
+            node.state(g).n_sat = ns
+            node.state(g).n_cached = nc
+        nodes.append(node)
+    return nodes
+
+
+# ---------------------------------------------------------------------------
+# Exactness vs the legacy reference
+# ---------------------------------------------------------------------------
+
+
+def test_feature_rows_bit_identical_to_build_features(world):
+    """The vectorized assembly replicates build_features bit-for-bit —
+    the property that makes every other equivalence in this file hold."""
+    specs, gt, store, qos, pred = world
+    names = sorted(specs)
+    fn = names[0]
+    coloc = {names[1]: (3.0, 1.0), names[2]: (2.0, 0.0),
+             names[3]: (1.0, 2.0)}
+    m_max = 9
+    # legacy rows, exactly as capacity_of builds them
+    spec = specs[fn]
+    others = dict(coloc)
+    legacy = []
+    for m in range(1, m_max + 1):
+        neigh = _neighbor_feats(store, specs, others, exclude=fn)
+        legacy.append(build_features(qos.solo(spec), store.profile(spec),
+                                     m, 0.0, neigh))
+        for g, (ns, nc) in others.items():
+            gspec = specs[g]
+            neigh_g = _neighbor_feats(store, specs, {**others, fn: (m, 0.0)},
+                                      exclude=g)
+            legacy.append(build_features(qos.solo(gspec),
+                                         store.profile(gspec), ns, nc,
+                                         neigh_g))
+    legacy = np.stack(legacy)
+    tmpl = _Template(store, qos, specs, coloc, fn)
+    batched, _bounds = tmpl.build(np.arange(1, m_max + 1))
+    assert batched.dtype == legacy.dtype == np.float32
+    assert np.array_equal(batched, legacy)  # bitwise
+
+
+def test_single_solve_matches_capacity_of_randomized(world):
+    specs, gt, store, qos, pred = world
+    eng = _engine(world, m_max=16, cache=False)
+    names = sorted(specs)
+    rng = np.random.default_rng(7)
+    for _ in range(40):
+        coloc = {}
+        for g in rng.choice(names, size=rng.integers(0, 4), replace=False):
+            coloc[g] = (float(rng.integers(0, 5)), float(rng.integers(0, 3)))
+        fn = names[rng.integers(len(names))]
+        m_max = int(rng.integers(1, 17))
+        cap_ref, _ = capacity_of(pred, store, qos, specs, dict(coloc), fn,
+                                 m_max)
+        cap_eng, _ = eng.capacity(dict(coloc), fn, m_max)
+        assert cap_eng == cap_ref
+
+
+def test_batched_node_update_matches_legacy_tables(world):
+    specs, gt, store, qos, pred = world
+    rng = np.random.default_rng(3)
+    nodes = _random_nodes(specs, rng, n_nodes=12)
+    ref_tables = []
+    for node in nodes:
+        update_capacity_table(pred, store, qos, specs, node, m_max=10)
+        ref_tables.append({fn: e.capacity for fn, e in node.table.items()})
+        node.table.clear()
+    eng = _engine(world, m_max=10)
+    eng.update_nodes(nodes, m_max=10)
+    for node, ref in zip(nodes, ref_tables):
+        got = {fn: e.capacity for fn, e in node.table.items()}
+        assert got == ref
+        assert all(e.fresh for e in node.table.values())
+
+
+def test_row_accounting_matches_legacy_path(world):
+    """With caching and early-exit disabled the engine builds exactly the
+    rows the legacy sweep would (m_max * rows_per_m per scenario)."""
+    specs, gt, store, qos, pred = world
+    rng = np.random.default_rng(5)
+    node_a, node_b = _random_nodes(specs, rng, n_nodes=2, n_patterns=2)
+    rows_ref = update_capacity_table(pred, store, qos, specs, node_a,
+                                     m_max=8)
+    # same colocation pattern solved through the engine in parity mode
+    eng = _engine(world, m_max=8, cache=False, early_exit=False)
+    rows_eng = eng.update_node(node_a, m_max=8)
+    assert rows_eng == rows_ref
+    # and the delegation hook on update_capacity_table routes to it
+    rows_hook = update_capacity_table(pred, store, qos, specs, node_a,
+                                      m_max=8, engine=eng)
+    assert rows_hook == rows_ref
+
+
+# ---------------------------------------------------------------------------
+# Cache semantics
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_returns_same_table_and_bills_zero_rows(world):
+    specs, gt, store, qos, pred = world
+    eng = _engine(world, m_max=12)
+    names = sorted(specs)
+    coloc = {names[1]: (2.0, 1.0)}
+    cap1, rows1 = eng.capacity(dict(coloc), names[0])
+    assert rows1 > 0
+    hits_before = eng.stats.cache_hits
+    cap2, rows2 = eng.capacity(dict(coloc), names[0])
+    assert cap2 == cap1
+    assert rows2 == 0
+    assert eng.stats.cache_hits == hits_before + 1
+    # same multiset in a different insertion order is the same signature
+    coloc2 = {names[1]: (2.0, 1.0)}
+    assert eng.signature(coloc2, names[0]) == eng.signature(coloc, names[0])
+
+
+def test_coalesced_duplicates_solved_once(world):
+    """Identically-loaded nodes inside ONE drain share a single solve."""
+    specs, gt, store, qos, pred = world
+    eng = _engine(world, m_max=10)
+    rng = np.random.default_rng(11)
+    nodes = _random_nodes(specs, rng, n_nodes=10, n_patterns=2)
+    eng.update_nodes(nodes, m_max=10)
+    assert eng.stats.unique_solves + eng.stats.cache_hits \
+        + eng.stats.coalesced_dupes == eng.stats.solves
+    assert eng.stats.unique_solves < eng.stats.solves  # sharing happened
+
+
+def test_invalidation_on_placement_change(world):
+    """A deploy changes the colocation signature, so the cached table for
+    the OLD placement is never served for the new one."""
+    specs, gt, store, qos, pred = world
+    eng = _engine(world, m_max=10)
+    names = sorted(specs)
+    node = Node(NodeResources())
+    node.state(names[1]).n_sat = 2
+    coloc_before = eng.node_coloc(node)
+    sig_before = eng.signature(coloc_before, names[1])
+    eng.update_node(node, m_max=10)
+    cap_before = node.table[names[1]].capacity
+    # placement change: a new function lands on the node
+    node.deploy(names[2], 3)
+    coloc_after = eng.node_coloc(node)
+    assert eng.signature(coloc_after, names[1]) != sig_before
+    assert eng.capacity_hint(coloc_after, names[1]) is None  # no stale hit
+    eng.update_node(node, m_max=10)
+    cap_ref, _ = capacity_of(pred, store, qos, specs, coloc_after,
+                             names[1], 10)
+    assert node.table[names[1]].capacity == cap_ref
+    # the old signature's entry is still valid for nodes that DO look
+    # like the old placement
+    assert eng.capacity_hint(coloc_before, names[1]) == cap_before
+
+
+def test_retrain_bumps_epoch_and_clears_cache(world):
+    specs, gt, store, qos, pred = world
+    # isolated predictor so we can retrain without disturbing `world`
+    p2 = PerfPredictor(n_trees=6, max_depth=6, seed=3)
+    X, y = generate_dataset(specs, gt, store, qos, 300, seed=9)
+    p2.add_dataset(X, y)
+    eng = CapacityEngine(p2, store, qos, specs, EngineConfig(m_max=8))
+    names = sorted(specs)
+    coloc = {names[1]: (2.0, 0.0)}
+    eng.capacity(dict(coloc), names[0])
+    assert eng.capacity_hint(dict(coloc), names[0]) is not None
+    p2.add_sample(X[0], float(y[0]), retrain=False)
+    p2.retrain()                                     # epoch bump
+    assert eng.capacity_hint(dict(coloc), names[0]) is None
+
+
+# ---------------------------------------------------------------------------
+# Scheduler / export-surface integration
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_with_engine_places_like_legacy(world):
+    specs, gt, store, qos, pred = world
+    fns = sorted(specs)
+    seqs = {}
+    for use_engine in (False, True):
+        cluster = Cluster(specs)
+        engine = _engine(world, m_max=12) if use_engine else None
+        sched = JiaguScheduler(cluster, store, qos, pred, m_max=12,
+                               engine=engine)
+        seq = []
+        for i in range(30):
+            placements = sched.schedule(fns[i % len(fns)], 1 + i % 3,
+                                        float(i))
+            seq.append(tuple(p.count for p in placements))
+            sched.on_tick(float(i) + 0.9)
+        tables = [sorted((fn, e.capacity) for fn, e in n.table.items())
+                  for n in cluster.nodes.values()]
+        seqs[use_engine] = (seq, tables)
+    assert seqs[False][0] == seqs[True][0]   # identical placement counts
+    assert seqs[False][1] == seqs[True][1]   # identical capacity tables
+
+
+def test_engine_drain_is_coalesced_into_few_predict_calls(world):
+    """The headline behavior: a drain over many due nodes costs a handful
+    of batched predictor calls, not one per (node, function)."""
+    specs, gt, store, qos, pred = world
+    eng = _engine(world, m_max=12)
+    rng = np.random.default_rng(13)
+    nodes = _random_nodes(specs, rng, n_nodes=32, n_patterns=5)
+    calls_before = pred.inference_calls
+    eng.update_nodes(nodes, m_max=12)
+    calls = pred.inference_calls - calls_before
+    n_scenarios = sum(len(eng.node_coloc(n)) for n in nodes)
+    assert n_scenarios > 30
+    assert calls <= 8  # chunk rounds, not per-scenario calls
+
+
+def test_export_surface_and_signature_quantization(world):
+    assert EngineViaSurface is CapacityEngine
+    sig_a = coloc_signature({"f": (2.001, 0.0)}, "g", 10, quant=4.0)
+    sig_b = coloc_signature({"f": (2.0, 0.0)}, "g", 10, quant=4.0)
+    assert sig_a == sig_b                      # sub-step jitter coalesces
+    sig_c = coloc_signature({"f": (2.5, 0.0)}, "g", 10, quant=4.0)
+    assert sig_c != sig_a                      # real differences kept

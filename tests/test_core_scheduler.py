@@ -2,8 +2,13 @@
 scheduler fast/slow paths, and baseline scheduler constraints."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # degraded deterministic fallback loop
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.core import (Cluster, GroundTruth, JiaguScheduler, K8sScheduler,
                         NodeResources, OwlScheduler, PerfPredictor,

@@ -3,8 +3,13 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # degraded deterministic fallback loop
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.distributed.fault_tolerance import (FailureInjector,
                                                InjectedFailure,

@@ -186,6 +186,25 @@ def test_rfr_forest_matches_ref(N, T, depth, F):
                                atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.tpu_only
+def test_rfr_forest_real_kernel_cluster_batch():
+    """The compiled (interpret=False) VMEM-resident forest kernel at a
+    cluster-scale batch — the path CapacityEngine drains feed on TPU."""
+    rng = np.random.default_rng(2)
+    T, depth, F = 32, 8, 31
+    NN = (1 << depth) - 1
+    x = rng.standard_normal((2048, F)).astype(np.float32)
+    feat = rng.integers(0, F, (T, NN)).astype(np.int32)
+    thr = rng.standard_normal((T, NN)).astype(np.float32)
+    leaf = rng.standard_normal((T, 1 << depth)).astype(np.float32)
+    got = rfr_forest_apply(jnp.asarray(x), jnp.asarray(feat),
+                           jnp.asarray(thr), jnp.asarray(leaf),
+                           interpret=False)
+    want = ref.rfr_forest_ref(x, feat, thr, leaf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_rfr_op_consistent_with_trained_model():
     """The Pallas engine and the numpy engine of the actual predictor
     agree on real trained trees."""

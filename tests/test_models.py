@@ -51,6 +51,16 @@ def test_prefill_decode_matches_forward(arch):
     """Teacher forcing: prefill(S0) + decode of the next tokens must match
     the full forward logits at those positions."""
     cfg = get_smoke_config(arch)
+    # MoE archs: capacity-based dropping differs between the full-sequence
+    # forward and the shorter prefill (per-expert capacity scales with
+    # token count), so logits at kept positions diverge for reasons that
+    # have nothing to do with the decode cache under test.  Lift capacity
+    # so no token drops and the equivalence is exact (verified: with no
+    # drops llama4 prefill matches forward to 0.0).
+    if cfg.moe is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
     params = _params(cfg)
     B, S0, n_dec = 2, 24, 4
     S = S0 + n_dec
@@ -66,10 +76,7 @@ def test_prefill_decode_matches_forward(arch):
     pre_batch = {k: (v[:, :S0] if k == "tokens" else v)
                  for k, v in batch.items()}
     logits0, cache = model_lib.prefill(cfg, params, pre_batch, S + n_front)
-    # MoE archs: full-sequence forward can DROP tokens at expert capacity
-    # while single-token decode never does — an intrinsic train/serve
-    # semantic difference of capacity-based MoE, so tolerances widen.
-    tol = 2.5e-2 if cfg.moe is not None else 5e-3
+    tol = 5e-3
     np.testing.assert_allclose(
         np.asarray(logits0, np.float32),
         np.asarray(full[:, n_front + S0 - 1], np.float32),
