@@ -12,11 +12,10 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (Autoscaler, BENCH_FUNCTIONS, Cluster, GroundTruth,
-                        GsightScheduler, JiaguScheduler, K8sScheduler,
-                        OwlScheduler, PerfPredictor, ProfileStore, QoSStore,
-                        ScalingConfig, SimConfig, SimResult, Simulation,
-                        generate_dataset, realworld_suite, synthetic_functions)
+from repro.core import (BENCH_FUNCTIONS, Cluster, GroundTruth,
+                        PerfPredictor, ProfileStore, QoSStore, SimResult,
+                        Simulation, build_simulation, generate_dataset,
+                        realworld_suite, synthetic_functions)
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
 CFORK_MS = 8.4      # cfork container init (paper §7.2)
@@ -59,25 +58,18 @@ def fresh_predictor(world: World, seed: int = 0) -> PerfPredictor:
 def make_sim(world: World, scheduler: str, trace, *, dual: bool = True,
              release_s: float = 45.0, keepalive_s: float = 60.0,
              init_ms: float = CFORK_MS, migrate: bool = True,
-             collect_samples: bool = False) -> Simulation:
-    cluster = Cluster(world.specs)
+             collect_samples: bool = False,
+             use_engine: Optional[bool] = None) -> Simulation:
+    """``use_engine=None`` keeps the SimConfig default (CapacityEngine,
+    since the engine-parity gate); ``False`` forces the legacy per-node
+    reference path."""
     pred = fresh_predictor(world) if scheduler in ("jiagu", "gsight") \
         else None
-    if scheduler == "jiagu":
-        sched = JiaguScheduler(cluster, world.store, world.qos, pred)
-    elif scheduler == "gsight":
-        sched = GsightScheduler(cluster, world.store, world.qos, pred)
-    elif scheduler == "owl":
-        sched = OwlScheduler(cluster, world.store, world.qos)
-    else:
-        sched = K8sScheduler(cluster, world.store, world.qos)
-    aut = Autoscaler(cluster, sched, ScalingConfig(
-        release_s=release_s, keepalive_s=keepalive_s,
-        dual_staged=dual and scheduler == "jiagu", init_ms=init_ms,
-        migrate=migrate))
-    return Simulation(world.specs, trace, sched, aut, world.gt, world.store,
-                      world.qos, predictor=pred,
-                      cfg=SimConfig(collect_samples=collect_samples))
+    return build_simulation(
+        world.specs, trace, Cluster(world.specs), world.gt, world.store,
+        world.qos, scheduler, pred, dual=dual, release_s=release_s,
+        keepalive_s=keepalive_s, init_ms=init_ms, migrate=migrate,
+        collect_samples=collect_samples, use_engine=use_engine)
 
 
 def save_artifact(name: str, record: dict):

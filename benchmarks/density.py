@@ -1,11 +1,15 @@
 """Paper Fig 13: normalized function density (K8s = 1.0) across the four
 real-world traces, for K8s / Owl / Gsight / Jiagu-NoDS / Jiagu-45 /
-Jiagu-30, plus QoS violation rates (must stay < 10%)."""
+Jiagu-30, plus QoS violation rates (must stay < 10%).
+
+Jiagu variants run on the CapacityEngine capacity path (the SimConfig
+default since the full-trace A/B parity gate, tests/test_engine_parity.py);
+the legacy per-node path is kept as the reference oracle."""
 from __future__ import annotations
 
 from .common import build_world, emit, make_sim, save_artifact
 
-from repro.core import realworld_suite
+from repro.core import SimConfig, realworld_suite
 
 VARIANTS = [
     ("k8s", dict()),
@@ -22,7 +26,8 @@ def run(duration: int = 600, quick: bool = False):
     fns = sorted(world.specs)
     traces = realworld_suite(fns, duration_s=duration,
                              n_traces=2 if quick else 4)
-    rows, record = [], {}
+    rows, record = [], {"use_capacity_engine":
+                        SimConfig().use_capacity_engine}
     for trace in traces:
         base = None
         for name, kw in VARIANTS:

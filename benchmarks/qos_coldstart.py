@@ -1,11 +1,15 @@
 """Paper Fig 14: (a) per-function QoS violation rates on Trace A for all
 systems; (b) cold starts avoided by dual-staged scaling + on-demand
-migration at 45 s and 30 s release sensitivity."""
+migration at 45 s and 30 s release sensitivity.
+
+Jiagu variants run on the CapacityEngine capacity path (the SimConfig
+default since the A/B parity gate); results are identical to the legacy
+per-node path by construction — tests/test_engine_parity.py."""
 from __future__ import annotations
 
 from .common import build_world, emit, make_sim, save_artifact
 
-from repro.core import realworld_suite
+from repro.core import SimConfig, realworld_suite
 
 
 def run(duration: int = 600, quick: bool = False):
@@ -46,8 +50,10 @@ def run(duration: int = 600, quick: bool = False):
             })
     print()
     emit(rows_b)
-    save_artifact("qos_coldstart", {"fig14a": rows_a, "fig14b": rows_b})
-    return {"fig14a": rows_a, "fig14b": rows_b}
+    record = {"fig14a": rows_a, "fig14b": rows_b,
+              "use_capacity_engine": SimConfig().use_capacity_engine}
+    save_artifact("qos_coldstart", record)
+    return record
 
 
 if __name__ == "__main__":

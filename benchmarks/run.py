@@ -10,6 +10,7 @@
 | Fig 14 QoS violations + reduced starts  | qos_coldstart     |
 | Fig 15/16/17 prediction + model zoo     | prediction        |
 | capacity-engine scaling (24->512 nodes) | capacity_engine   |
+| large-cluster scenario study + A/B gate | large_cluster     |
 | kernel/arch microbench                  | model_perf        |
 | §Roofline table (reads dry-run JSONs)   | roofline_report   |
 """
@@ -26,8 +27,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (capacity_engine, density, model_perf, prediction,
-                   qos_coldstart, roofline_report, scheduling_cost)
+    from . import (capacity_engine, density, large_cluster, model_perf,
+                   prediction, qos_coldstart, roofline_report,
+                   scheduling_cost)
     suites = [
         ("scheduling_cost", lambda: scheduling_cost.run(
             duration=300 if args.quick else 600, quick=args.quick)),
@@ -37,6 +39,7 @@ def main() -> None:
             duration=300 if args.quick else 600, quick=args.quick)),
         ("prediction", lambda: prediction.run(quick=args.quick)),
         ("capacity_engine", lambda: capacity_engine.run(quick=args.quick)),
+        ("large_cluster", lambda: large_cluster.run(quick=args.quick)),
         ("model_perf", lambda: model_perf.run(quick=args.quick)),
         ("roofline_report", lambda: roofline_report.run()),
     ]

@@ -4,6 +4,11 @@ schedule, and cold-start latency with cfork / docker container init.
 Extreme traces (Fig 11): ``timer`` (best case — all fast path) and
 ``flip`` (worst case — every schedule is a slow path).  Real-world traces
 (Fig 12): four Huawei-like trace sets.  Jiagu vs Gsight (same predictor).
+
+Jiagu's slow-path and async capacity solves run on the CapacityEngine
+(the SimConfig default since the A/B parity gate): decisions and tables
+are identical to the legacy per-node path, only cheaper — so measured
+scheduling cost reflects the engine's coalesced/cached solving.
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import numpy as np
 from .common import (CFORK_MS, DOCKER_MS, build_world, emit, make_sim,
                      save_artifact)
 
-from repro.core import flip_trace, realworld_suite, timer_trace
+from repro.core import SimConfig, flip_trace, realworld_suite, timer_trace
 
 # Table 2 container-start systems (paper-reported init latencies, ms)
 TABLE2_SYSTEMS = {
@@ -108,6 +113,7 @@ def run(duration: int = 600, quick: bool = False):
     print()
     emit(t2)
     record["table2"] = {"gsight_ms": g_ms, "jiagu_ms": j_ms}
+    record["use_capacity_engine"] = SimConfig().use_capacity_engine
     save_artifact("scheduling_cost", record)
     return record
 

@@ -3,7 +3,13 @@ model replicas (smoke-scale gemma2 + mamba2), driven by a fluctuating
 request trace.  Dual-staged scaling releases/revives replicas as load
 moves; every completion is a real greedy decode.
 
+``--scenario`` swaps the default sinusoidal offered load for one of the
+large-cluster scenario trace programs (correlated burst storms,
+migrating diurnal peaks, heavy-tailed cold-start churn, the Azure-like
+sparse tail), normalized to smoke-scale request rates.
+
   PYTHONPATH=src python examples/serve_cluster.py [--seconds 60]
+      [--scenario burst-storm]
 """
 import argparse
 import os
@@ -16,8 +22,34 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_smoke_config
+from repro.core.traces import (azure_sparse_trace, burst_storm_trace,
+                               coldstart_churn_trace, diurnal_shift_trace)
 from repro.models import model as model_lib
 from repro.serving.engine import Request, ServingEngine
+
+SCENARIO_TRACES = {
+    "burst-storm": burst_storm_trace,
+    "diurnal-shift": diurnal_shift_trace,
+    "coldstart-churn": coldstart_churn_trace,
+    "azure-sparse": azure_sparse_trace,
+}
+
+
+def offered_load(scenario: str, archs, seconds: int, seed: int = 0,
+                 peak: float = 3.5):
+    """Per-arch Poisson-rate series from a scenario trace program.
+
+    One global normalization (the hottest arch's hottest second offers
+    ``peak`` requests) so the cross-arch load skew the scenario
+    generators produce is preserved; None for the default sinusoid."""
+    if scenario == "sinusoid":
+        return None
+    gen = SCENARIO_TRACES[scenario]
+    tr = gen(list(archs), duration_s=seconds, seed=seed,
+             scale_rps={a: 1.0 for a in archs})
+    hi = max(float(tr.rps[a].max()) for a in archs)
+    factor = peak / hi if hi > 0 else 1.0
+    return {a: tr.rps[a] * factor for a in archs}
 
 
 def main():
@@ -25,6 +57,10 @@ def main():
     ap.add_argument("--seconds", type=int, default=30)
     ap.add_argument("--release-after", type=int, default=6,
                     help="ticks of low load before releasing a replica")
+    ap.add_argument("--scenario", default="sinusoid",
+                    choices=["sinusoid"] + sorted(SCENARIO_TRACES),
+                    help="offered-load program (default: sinusoid)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     engines = {}
@@ -35,15 +71,21 @@ def main():
         eng.scale_up(2)
         engines[arch] = (cfg, eng)
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     rid = 0
     low_ticks = {a: 0 for a in engines}
     stats = {a: dict(logical=0, released=0, done=0) for a in engines}
+    load = offered_load(args.scenario, list(engines), args.seconds,
+                        seed=args.seed)
 
     for t in range(args.seconds):
         for arch, (cfg, eng) in engines.items():
-            # sinusoidal offered load, out of phase per arch
-            lam = 1.5 + 1.4 * np.sin(t / 5.0 + (0 if arch < "m" else 2.5))
+            if load is not None:
+                lam = float(load[arch][t])
+            else:
+                # sinusoidal offered load, out of phase per arch
+                lam = 1.5 + 1.4 * np.sin(t / 5.0
+                                         + (0 if arch < "m" else 2.5))
             for _ in range(rng.poisson(max(lam, 0.05))):
                 eng.submit(Request(rid=rid, prompt=rng.integers(
                     0, cfg.vocab_size, 12).astype(np.int32), max_new=4))

@@ -2,7 +2,16 @@
 # Tier-1 verification: the exact command the roadmap pins.
 #   scripts/verify.sh            full suite
 #   scripts/verify.sh tests/...  any extra pytest args pass through
+#   scripts/verify.sh --full     tier-1 + slow-marked tests + the quick
+#                                large-cluster scenario benchmark (the
+#                                engine-default A/B gate end to end)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "${1:-}" = "--full" ]; then
+    shift
+    RUN_SLOW=1 python -m pytest -x -q "$@"
+    python -m benchmarks.large_cluster --quick
+    exit 0
+fi
 exec python -m pytest -x -q "$@"

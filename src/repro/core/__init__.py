@@ -14,9 +14,16 @@ from .profiles import (BENCH_FUNCTIONS, FunctionSpec, ProfileStore,
 from .scheduler import (FAST_PATH_MS, REROUTE_MS, BaseScheduler,
                         GsightScheduler, JiaguScheduler, K8sScheduler,
                         OwlScheduler)
+from .scenarios import (LARGE_NODE, SCENARIO_KINDS, STANDARD_NODE,
+                        NodeClass, Scenario, ScenarioWorld,
+                        build_simulation, make_scenario,
+                        scale_trace_to_nodes, scenario_functions,
+                        scenario_simulation, scenario_suite,
+                        scenario_world, zipf_weights)
 from .simulator import SimConfig, SimResult, Simulation, generate_dataset
-from .traces import Trace, flip_trace, realworld_suite, realworld_trace, \
-    timer_trace
+from .traces import (Trace, azure_sparse_trace, burst_storm_trace,
+                     coldstart_churn_trace, diurnal_shift_trace, flip_trace,
+                     realworld_suite, realworld_trace, timer_trace)
 
 __all__ = [
     "Autoscaler", "ScalingConfig", "ScalingMetrics", "QOS_MULT", "QoSStore",
@@ -29,4 +36,10 @@ __all__ = [
     "GsightScheduler", "JiaguScheduler", "K8sScheduler", "OwlScheduler",
     "SimConfig", "SimResult", "Simulation", "generate_dataset", "Trace",
     "flip_trace", "realworld_suite", "realworld_trace", "timer_trace",
+    "burst_storm_trace", "diurnal_shift_trace", "coldstart_churn_trace",
+    "azure_sparse_trace", "NodeClass", "Scenario", "ScenarioWorld",
+    "STANDARD_NODE", "LARGE_NODE", "SCENARIO_KINDS", "build_simulation",
+    "make_scenario", "scenario_functions", "scenario_simulation",
+    "scenario_suite", "scenario_world", "scale_trace_to_nodes",
+    "zipf_weights",
 ]

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 from .interference import NodeResources
 from .profiles import FunctionSpec
@@ -111,19 +111,33 @@ class Node:
 
 class Cluster:
     """Elastic node pool (paper §6: new server requested when no node fits;
-    empty servers are returned)."""
+    empty servers are returned).
+
+    ``res_pool`` makes the fleet heterogeneous: newly requested servers
+    cycle deterministically through the pool's node shapes (the scenario
+    subsystem builds weighted pools from its ``NodeClass`` mix), so the
+    same scenario always produces the same node-size sequence."""
 
     def __init__(self, specs: Dict[str, FunctionSpec],
                  res: Optional[NodeResources] = None,
-                 max_nodes: int = 1000):
+                 max_nodes: int = 1000,
+                 res_pool: Optional[Sequence[NodeResources]] = None):
+        if res is not None and res_pool:
+            raise ValueError("pass either res (homogeneous fleet) or "
+                             "res_pool (heterogeneous mix), not both")
         self.specs = specs
-        self.res = res or NodeResources()
+        self.res_pool: Tuple[NodeResources, ...] = \
+            tuple(res_pool) if res_pool else ()
+        self.res = res or (self.res_pool[0] if self.res_pool
+                           else NodeResources())
         self.nodes: Dict[int, Node] = {}
         self.max_nodes = max_nodes
         self.nodes_added = 0
 
     def add_node(self) -> Node:
-        node = Node(self.res)
+        res = self.res_pool[self.nodes_added % len(self.res_pool)] \
+            if self.res_pool else self.res
+        node = Node(res)
         self.nodes[node.id] = node
         self.nodes_added += 1
         return node

@@ -73,9 +73,14 @@ class GroundTruth:
     # -- node-level pressures ------------------------------------------
 
     def _pressures(self, colocation: Mapping[str, Tuple[FunctionSpec, float,
-                                                        float]]):
-        """colocation: name -> (spec, n_saturated, n_cached)."""
-        nd = self.node
+                                                        float]],
+                   node_res: NodeResources | None = None):
+        """colocation: name -> (spec, n_saturated, n_cached).
+
+        ``node_res`` overrides the default node shape — the heterogeneous-
+        fleet path, where pressures are relative to the *hosting* node's
+        capacity (a 2x node halves every rho for the same colocation)."""
+        nd = node_res or self.node
         cpu = bw = cache = mem = 0.0
         for spec, n_sat, n_cached in colocation.values():
             resid = nd.cached_residual * n_cached
@@ -94,10 +99,11 @@ class GroundTruth:
 
     def latency(self, fn: FunctionSpec,
                 colocation: Mapping[str, Tuple[FunctionSpec, float, float]],
-                load_frac: float = 1.0) -> float:
+                load_frac: float = 1.0,
+                node_res: NodeResources | None = None) -> float:
         """P90 latency of `fn`'s instances on a node with `colocation`
         (which must include fn itself)."""
-        rho_cpu, rho_bw, rho_cache, _ = self._pressures(colocation)
+        rho_cpu, rho_bw, rho_cache, _ = self._pressures(colocation, node_res)
         cpu_term = fn.cpu_sens * _queue(rho_cpu)
         bw_term = fn.bw_sens * _queue(rho_bw, knee=0.55)
         # LLC only hurts once combined working sets actually spill it
@@ -109,14 +115,16 @@ class GroundTruth:
 
     def measure(self, fn: FunctionSpec,
                 colocation: Mapping[str, Tuple[FunctionSpec, float, float]],
-                load_frac: float = 1.0, noise: float = 0.04) -> float:
+                load_frac: float = 1.0, noise: float = 0.04,
+                node_res: NodeResources | None = None) -> float:
         """A *measurement* of the latency — ground truth + measurement
         noise.  This is what training samples and QoS monitoring see."""
-        lat = self.latency(fn, colocation, load_frac)
+        lat = self.latency(fn, colocation, load_frac, node_res)
         return float(lat * (1.0 + self._rng.normal(0.0, noise)))
 
     def fits(self, colocation: Mapping[str, Tuple[FunctionSpec, float,
-                                                  float]]) -> bool:
+                                                  float]],
+             node_res: NodeResources | None = None) -> bool:
         """Hard feasibility: memory is not overcommittable."""
-        _, _, _, rho_mem = self._pressures(colocation)
+        _, _, _, rho_mem = self._pressures(colocation, node_res)
         return rho_mem <= 1.0

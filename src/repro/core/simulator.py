@@ -31,10 +31,11 @@ class SimConfig:
     collect_samples: bool = True
     sample_every_s: int = 20
     seed: int = 0
-    # capacity-solve path: True attaches a CapacityEngine to a Jiagu
-    # scheduler (coalesced/cached/vectorized cluster-scale solving);
-    # False keeps the legacy per-node reference path.
-    use_capacity_engine: bool = False
+    # capacity-solve path: True (default since the full-trace A/B parity
+    # gate, tests/test_engine_parity.py) attaches a CapacityEngine to a
+    # Jiagu scheduler (coalesced/cached/vectorized cluster-scale solving);
+    # False keeps the legacy per-node path as the reference oracle.
+    use_capacity_engine: bool = True
 
 
 @dataclass
@@ -45,6 +46,7 @@ class SimResult:
     violated_requests: float = 0.0
     instance_seconds: float = 0.0
     node_seconds: float = 0.0
+    nodes_peak: int = 0
     density_series: List[float] = field(default_factory=list)
     per_fn_violations: Dict[str, float] = field(default_factory=dict)
     per_fn_requests: Dict[str, float] = field(default_factory=dict)
@@ -116,6 +118,7 @@ class Simulation:
             nodes = len(self.cluster.nodes)
             res.instance_seconds += inst
             res.node_seconds += nodes
+            res.nodes_peak = max(res.nodes_peak, nodes)
             res.density_series.append(inst / nodes if nodes else 0.0)
         res.sched = self.scheduler.metrics
         res.scaling = self.autoscaler.metrics
@@ -143,7 +146,8 @@ class Simulation:
                     continue
                 per_inst_rps = fn_rps / total_sat
                 load_frac = per_inst_rps / spec.saturated_rps
-                lat = self.gt.measure(spec, coloc, load_frac)
+                lat = self.gt.measure(spec, coloc, load_frac,
+                                      node_res=node.res)
                 reqs = fn_rps * (n_sat / total_sat)  # routed to this node
                 res.requests += reqs
                 res.per_fn_requests[fn] = \
@@ -158,9 +162,15 @@ class Simulation:
     def _collect_sample(self):
         """Runtime training-sample collection (training nodes, §3/§6):
         measure one random busy node's functions at saturated load and add
-        (features, label) pairs to the predictor's dataset."""
+        (features, label) pairs to the predictor's dataset.
+
+        Only standard-shape nodes (matching the ground truth's profiling
+        node) are sampled: on a heterogeneous fleet, labels from larger
+        nodes would mix a different pressure scale into a feature space
+        that cannot express node size."""
         busy = [n for n in self.cluster.nodes.values()
-                if any(s.n_sat > 0 for s in n.funcs.values())]
+                if any(s.n_sat > 0 for s in n.funcs.values())
+                and n.res == self.gt.node]
         if not busy:
             return
         node = busy[self._rng.integers(len(busy))]
@@ -185,7 +195,8 @@ class Simulation:
 def generate_dataset(specs: Dict[str, FunctionSpec], gt: GroundTruth,
                      store: ProfileStore, qos: QoSStore, n_samples: int,
                      seed: int = 0, max_kinds: int = 4, max_count: int = 24,
-                     include_solo: bool = True
+                     include_solo: bool = True,
+                     budget_range: Tuple[float, float] = (0.25, 1.6)
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Random colocation scenarios measured against the ground truth —
     what the training nodes accumulate before the model converges.
@@ -193,7 +204,15 @@ def generate_dataset(specs: Dict[str, FunctionSpec], gt: GroundTruth,
     ``include_solo`` additionally sweeps each function alone at
     m = 1..6 — the profiling-node measurements the paper's solo-run
     methodology produces; without them the forest extrapolates poorly at
-    the uncontended corner and under-reports capacities."""
+    the uncontended corner and under-reports capacities.
+
+    ``budget_range`` bounds the sampled requested-CPU packing (in units
+    of node capacity).  The default spans under-packed to ~1.6x
+    overcommitted — the capacity solver's decision region for the paper's
+    six-function world.  Large Zipf-populated scenarios pack small-slot
+    functions deeper, so their worlds train with a wider range (the
+    forest extrapolates *flat* past its training ceiling and would
+    otherwise under-predict exactly where overcommitting gets risky)."""
     rng = np.random.default_rng(seed)
     names = sorted(specs)
     X, y = [], []
@@ -218,7 +237,7 @@ def generate_dataset(specs: Dict[str, FunctionSpec], gt: GroundTruth,
         # absurd densities and starve the boundary.
         kinds = rng.choice(names, size=rng.integers(1, max_kinds + 1),
                            replace=False)
-        budget = rng.uniform(0.25, 1.6) * node.cpu_mcores
+        budget = rng.uniform(*budget_range) * node.cpu_mcores
         shares = rng.dirichlet(np.ones(len(kinds)))
         coloc = {}
         for k, share in zip(kinds, shares):

@@ -1,4 +1,4 @@
-"""Invocation traces (paper §7.1).
+"""Invocation traces (paper §7.1) and the large-cluster scenario programs.
 
 Four generated "real-world-like" trace sets with the statistical shape of
 the Huawei Cloud production traces described in the paper and in SHEPHERD/
@@ -10,12 +10,28 @@ prediction fails and dual-staged scaling wins.
 Also the two extreme traces of §7.2: ``timer`` (fixed-frequency single
 function — best case, all fast path) and ``flip`` (concurrency oscillates
 0 <-> 1 — worst case, every schedule is a slow path).
+
+Beyond the paper's four same-shaped sets, the large-cluster scenario suite
+(``repro.core.scenarios``) draws on four additional regimes:
+
+  * ``burst_storm_trace``   — correlated cross-function spikes: global
+    storm events hit a random coherent subset of functions at once, the
+    flash-crowd case where per-function prewarming prediction is blind.
+  * ``diurnal_shift_trace`` — regional peak migration: functions belong
+    to regions whose diurnal peaks drift across the trace, so yesterday's
+    placement is always stale.
+  * ``coldstart_churn_trace`` — heavy-tailed on/off churn (Pareto gaps):
+    functions sit idle past any keep-alive horizon, then burst — the
+    cold-start-dominated long tail.
+  * ``azure_sparse_trace``  — Azure-Functions-like population: a few hot
+    functions carry most load while a Zipf long tail is invoked sparsely
+    (most functions see well under one request per minute).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -29,7 +45,13 @@ class Trace:
     duration_s: int
 
     def at(self, fn: str, t: int) -> float:
-        return float(self.rps[fn][min(t, self.duration_s - 1)])
+        """RPS of `fn` at second `t`; out-of-range `t` clamps to the
+        trace's first/last second, unknown functions raise KeyError."""
+        if fn not in self.rps:
+            raise KeyError(
+                f"function {fn!r} not in trace {self.name!r} "
+                f"(has {sorted(self.rps)})")
+        return float(self.rps[fn][min(max(t, 0), self.duration_s - 1)])
 
 
 def realworld_trace(fn_names: List[str], duration_s: int = 3600,
@@ -91,6 +113,156 @@ def timer_trace(fn: str, duration_s: int = 600, period_s: int = 60,
         k = (t // period_s) % 2
         rps[t] = rps_per_inst * (n_inst + 2 * k) * 0.95
     return Trace("timer", {fn: rps}, duration_s)
+
+
+def burst_storm_trace(fn_names: List[str], duration_s: int = 3600,
+                      seed: int = 0, scale_rps: Dict[str, float] | None = None,
+                      storms_per_hour: float = 10.0, coherence: float = 0.6,
+                      name: str | None = None) -> Trace:
+    """Correlated cross-function spike storms.
+
+    A quiet per-function base load is punctured by cluster-wide storm
+    events at Poisson times; each storm recruits a random ``coherence``
+    fraction of the population simultaneously with a 3-8x spike.  Unlike
+    ``realworld_trace`` (independent per-function bursts), the spikes are
+    *correlated*, so the scheduler faces synchronized scale-up demand —
+    the flash-crowd regime where short-interval prediction fails.
+    """
+    rng = np.random.default_rng(seed)
+    t = np.arange(duration_s, dtype=np.float64)
+    base = {}
+    for fn in fn_names:
+        level = rng.uniform(0.15, 0.45)
+        period = rng.uniform(1200, 3000)
+        phase = rng.uniform(0, 2 * math.pi)
+        base[fn] = level * (0.8 + 0.2 * np.sin(2 * math.pi * t / period
+                                               + phase))
+    n_storms = max(1, int(rng.poisson(storms_per_hour * duration_s / 3600)))
+    storm = {fn: np.zeros(duration_s) for fn in fn_names}
+    for _ in range(n_storms):
+        s = int(rng.integers(0, duration_s))
+        w = int(rng.uniform(20, 90))
+        e = min(s + w, duration_s)
+        amp = rng.uniform(3.0, 8.0)
+        envelope = amp * np.linspace(1, 0, e - s) ** 0.7
+        hit = rng.random(len(fn_names)) < coherence
+        if not hit.any():
+            hit[rng.integers(len(fn_names))] = True
+        for fn, h in zip(fn_names, hit):
+            if h:
+                storm[fn][s:e] = np.maximum(storm[fn][s:e], envelope)
+    out = {}
+    for fn in fn_names:
+        shape = base[fn] * (1 + storm[fn])
+        shape = shape * rng.lognormal(0, 0.2, duration_s)
+        peak = (scale_rps or {}).get(fn, rng.uniform(40, 400))
+        out[fn] = np.clip(shape * peak, 0.0, None)
+    return Trace(name or f"burst-storm-seed{seed}", out, duration_s)
+
+
+def diurnal_shift_trace(fn_names: List[str], duration_s: int = 3600,
+                        seed: int = 0,
+                        scale_rps: Dict[str, float] | None = None,
+                        n_regions: int = 3, period_s: float = 1800.0,
+                        shift_frac: float = 1.0,
+                        name: str | None = None) -> Trace:
+    """Regional peak migration.
+
+    Functions are assigned round-robin to ``n_regions`` regions whose
+    diurnal peaks start out of phase and *drift* by ``shift_frac`` full
+    periods over the trace (peak time migrating between regions, the
+    follow-the-sun load pattern).  Placement tuned for one region's peak
+    is systematically wrong an hour later.
+    """
+    rng = np.random.default_rng(seed)
+    t = np.arange(duration_s, dtype=np.float64)
+    n_regions = max(1, min(n_regions, len(fn_names)))
+    # drifting phase: peak center moves shift_frac periods over the trace
+    drift = 2 * math.pi * shift_frac * t / max(duration_s, 1)
+    regional = []
+    for r in range(n_regions):
+        phase0 = 2 * math.pi * r / n_regions
+        act = np.sin(2 * math.pi * t / period_s + phase0 + drift)
+        # sharpen into a peaked activity bump, floor at a quiet baseline
+        regional.append(0.08 + np.maximum(act, 0.0) ** 2)
+    out = {}
+    for i, fn in enumerate(fn_names):
+        shape = regional[i % n_regions] * rng.uniform(0.8, 1.2)
+        shape = shape * rng.lognormal(0, 0.15, duration_s)
+        peak = (scale_rps or {}).get(fn, rng.uniform(40, 400))
+        out[fn] = np.clip(shape * peak, 0.0, None)
+    return Trace(name or f"diurnal-shift-seed{seed}", out, duration_s)
+
+
+def coldstart_churn_trace(fn_names: List[str], duration_s: int = 3600,
+                          seed: int = 0,
+                          scale_rps: Dict[str, float] | None = None,
+                          pareto_shape: float = 1.1, off_min_s: float = 30.0,
+                          on_s: Tuple[float, float] = (5.0, 30.0),
+                          name: str | None = None) -> Trace:
+    """Heavy-tailed on/off churn — the cold-start-dominated regime.
+
+    Each function alternates OFF gaps drawn from a Pareto distribution
+    (shape ~1.1: infinite-variance heavy tail, so many gaps outlast any
+    keep-alive window) and short ON bursts at a one-to-few-instance load.
+    Capacity-table entries and cached instances are constantly evicted
+    before the next arrival — sustained slow-path and cold-start pressure.
+    """
+    rng = np.random.default_rng(seed)
+    out = {}
+    for fn in fn_names:
+        series = np.zeros(duration_s)
+        level = rng.uniform(0.6, 1.4)
+        t = float(rng.uniform(0, off_min_s))   # staggered first burst
+        while t < duration_s:
+            w = rng.uniform(*on_s)
+            s, e = int(t), min(int(t + w), duration_s)
+            series[s:e] = level * rng.uniform(0.7, 1.3)
+            t += w
+            t += off_min_s * float(rng.pareto(pareto_shape) + 1.0)
+        peak = (scale_rps or {}).get(fn, rng.uniform(10, 60))
+        out[fn] = np.clip(series * peak, 0.0, None)
+    return Trace(name or f"coldstart-churn-seed{seed}", out, duration_s)
+
+
+def azure_sparse_trace(fn_names: List[str], duration_s: int = 3600,
+                       seed: int = 0,
+                       scale_rps: Dict[str, float] | None = None,
+                       hot_frac: float = 0.1, zipf_s: float = 1.5,
+                       name: str | None = None) -> Trace:
+    """Azure-Functions-like sparse-invocation long tail.
+
+    A ``hot_frac`` head of the population carries smooth diurnal load;
+    the remaining tail is invoked sparsely — isolated few-second episodes
+    at Poisson times whose rates follow a Zipf law over the tail ranks,
+    so most tail functions see well under one invocation per minute and
+    their per-second series is almost entirely zero.
+    """
+    rng = np.random.default_rng(seed)
+    t = np.arange(duration_s, dtype=np.float64)
+    n_hot = max(1, int(round(hot_frac * len(fn_names))))
+    out = {}
+    for i, fn in enumerate(fn_names):
+        if i < n_hot:
+            period = rng.uniform(1500, 3600)
+            phase = rng.uniform(0, 2 * math.pi)
+            shape = (0.45 + 0.35 * np.sin(2 * math.pi * t / period + phase)
+                     ) * rng.lognormal(0, 0.2, duration_s)
+            peak = (scale_rps or {}).get(fn, rng.uniform(80, 400))
+            out[fn] = np.clip(shape * peak, 0.0, None)
+            continue
+        rank = i - n_hot + 1
+        # mean invocation episodes per hour, Zipf-decaying down the tail
+        rate_per_hour = 30.0 / rank ** zipf_s + 0.2
+        series = np.zeros(duration_s)
+        n_events = rng.poisson(rate_per_hour * duration_s / 3600)
+        peak = (scale_rps or {}).get(fn, rng.uniform(3, 15))
+        for _ in range(n_events):
+            s = int(rng.integers(0, duration_s))
+            e = min(s + int(rng.uniform(2, 8)), duration_s)
+            series[s:e] = peak * rng.uniform(0.5, 1.0)
+        out[fn] = series
+    return Trace(name or f"azure-sparse-seed{seed}", out, duration_s)
 
 
 def flip_trace(fns: List[str], duration_s: int = 600,

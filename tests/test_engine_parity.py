@@ -1,0 +1,92 @@
+"""System-level engine-vs-legacy regression: the gate that let
+``SimConfig.use_capacity_engine`` default to True.
+
+The same full scenario trace is simulated twice from bit-identical
+starting state — once on the legacy per-node capacity path, once with the
+CapacityEngine — and everything observable must match: final capacity
+tables, QoS-violation rate, density, and the scheduling/scaling
+counters.  (The engine is allowed to be *cheaper* — fewer predictor
+calls — never *different*.)"""
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, make_scenario, scenario_simulation,
+                        scenario_world)
+
+KIND = "burst-storm"
+DURATION = 100
+TARGET_NODES = 14
+N_FUNCTIONS = 6
+SEED = 3
+
+
+def _arm(use_engine: bool):
+    """One A/B arm built from scratch: same seeds -> same specs, trace,
+    ground truth, profiles and forest for both arms."""
+    scenario = make_scenario(KIND, n_functions=N_FUNCTIONS,
+                             duration_s=DURATION,
+                             target_nodes=TARGET_NODES, seed=SEED)
+    world = scenario_world(scenario, n_train=700, n_trees=10)
+    sim = scenario_simulation(scenario, "jiagu", world=world,
+                              use_engine=use_engine)
+    res = sim.run()
+    tables = sorted(
+        tuple(sorted((fn, e.capacity) for fn, e in node.table.items()))
+        for node in sim.cluster.nodes.values())
+    return res, tables, sim
+
+
+@pytest.fixture(scope="module")
+def ab():
+    legacy = _arm(False)
+    engine = _arm(True)
+    return legacy, engine
+
+
+def test_engine_defaults_on_and_attaches(ab):
+    assert SimConfig().use_capacity_engine is True
+    (_, _, sim_legacy), (_, _, sim_engine) = ab
+    assert sim_legacy.scheduler.engine is None
+    assert sim_engine.scheduler.engine is not None
+    assert sim_engine.scheduler.engine.stats.solves > 0
+
+
+def test_capacity_tables_identical(ab):
+    (_, tables_l, _), (_, tables_e, _) = ab
+    assert tables_l == tables_e
+
+
+def test_qos_density_and_request_accounting_match(ab):
+    (legacy, _, _), (engine, _, _) = ab
+    assert np.isclose(legacy.qos_violation_rate, engine.qos_violation_rate,
+                      rtol=1e-12, atol=1e-15)
+    assert np.isclose(legacy.density, engine.density, rtol=1e-12)
+    assert legacy.requests == pytest.approx(engine.requests, rel=1e-12)
+    assert legacy.violated_requests == pytest.approx(
+        engine.violated_requests, rel=1e-12)
+    assert np.allclose(legacy.density_series, engine.density_series,
+                       rtol=1e-12)
+
+
+def test_scheduling_metrics_match(ab):
+    (legacy, _, _), (engine, _, _) = ab
+    ls, es = legacy.sched, engine.sched
+    assert (ls.decisions, ls.fast, ls.slow, ls.failed,
+            ls.instances_placed) == \
+        (es.decisions, es.fast, es.slow, es.failed, es.instances_placed)
+
+
+def test_scaling_metrics_match(ab):
+    (legacy, _, _), (engine, _, _) = ab
+    lsc, esc = legacy.scaling, engine.scaling
+    assert (lsc.real_cold_starts, lsc.logical_cold_starts, lsc.releases,
+            lsc.evictions, lsc.migrations) == \
+        (esc.real_cold_starts, esc.logical_cold_starts, esc.releases,
+         esc.evictions, esc.migrations)
+
+
+def test_engine_is_cheaper_never_different(ab):
+    """The whole point of the default flip: same behavior, fewer batched
+    predictor calls on the async-update path."""
+    (legacy, _, _), (engine, _, _) = ab
+    assert engine.inference_calls < legacy.inference_calls

@@ -101,6 +101,24 @@ def test_dual_staged_improves_density(world):
     assert r_ds.scaling.releases > 0
 
 
+def test_trace_at_clamps_out_of_range_and_rejects_unknown_fn():
+    """Trace.at semantics: t past either end clamps to the trace edge
+    (simulations may run longer than the trace program), and a lookup
+    for a function the trace does not know is a KeyError, not a silent
+    zero."""
+    trace = timer_trace("f", duration_s=10, period_s=3)
+    first, last = trace.rps["f"][0], trace.rps["f"][-1]
+    assert first != last  # the clamp direction is actually observable
+    assert trace.at("f", 9) == last
+    assert trace.at("f", 10) == last        # one past the end
+    assert trace.at("f", 10_000) == last    # far past the end
+    assert trace.at("f", 0) == first
+    assert trace.at("f", -1) == first       # negative t clamps, never
+    assert trace.at("f", -999) == first     # wraps to the array tail
+    with pytest.raises(KeyError, match="ghost"):
+        trace.at("ghost", 0)
+
+
 def test_simulation_accounting_consistent(world):
     trace = realworld_trace(sorted(world[0]), duration_s=200, seed=19)
     r = _run(world, "jiagu", trace)

@@ -1,0 +1,143 @@
+"""Property tests for every trace generator: non-negative RPS, exact
+duration, seed determinism, linear peak scaling, the ``flip`` out-of-phase
+invariant and the ``timer`` two-level invariant.
+
+Runs under real `hypothesis` when installed, else under the deterministic
+fallback shim (same assertions, fixed-seed sampled inputs)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.core import (azure_sparse_trace, burst_storm_trace,
+                        coldstart_churn_trace, diurnal_shift_trace,
+                        flip_trace, realworld_trace, timer_trace)
+
+#: the population-style generators: (fn_names, duration_s, seed, scale_rps)
+POPULATION_GENERATORS = [realworld_trace, burst_storm_trace,
+                         diurnal_shift_trace, coldstart_churn_trace,
+                         azure_sparse_trace]
+
+
+def _fns(n):
+    return [f"fn{i:02d}" for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Shared invariants: shape, sign, finiteness, determinism
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(gen_i=st.integers(0, len(POPULATION_GENERATORS) - 1),
+       n=st.integers(1, 6), duration=st.integers(30, 180),
+       seed=st.integers(0, 9))
+def test_nonnegative_finite_exact_duration(gen_i, n, duration, seed):
+    gen = POPULATION_GENERATORS[gen_i]
+    tr = gen(_fns(n), duration_s=duration, seed=seed)
+    assert tr.duration_s == duration
+    assert set(tr.rps) == set(_fns(n))
+    for series in tr.rps.values():
+        assert series.shape == (duration,)
+        assert np.isfinite(series).all()
+        assert (series >= 0.0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(gen_i=st.integers(0, len(POPULATION_GENERATORS) - 1),
+       n=st.integers(2, 5), seed=st.integers(0, 9))
+def test_seed_determinism(gen_i, n, seed):
+    """Same seed -> bit-identical series; different seed -> different
+    trace (the scenario suite depends on reproducible worlds)."""
+    gen = POPULATION_GENERATORS[gen_i]
+    fns = _fns(n)
+    a = gen(fns, duration_s=120, seed=seed)
+    b = gen(fns, duration_s=120, seed=seed)
+    for fn in fns:
+        assert np.array_equal(a.rps[fn], b.rps[fn])
+    c = gen(fns, duration_s=120, seed=seed + 100)
+    assert any(not np.array_equal(a.rps[fn], c.rps[fn]) for fn in fns)
+
+
+@settings(max_examples=10, deadline=None)
+@given(gen_i=st.integers(0, len(POPULATION_GENERATORS) - 1),
+       n=st.integers(1, 4), seed=st.integers(0, 9),
+       mult=st.integers(2, 5))
+def test_peak_scaling_is_linear(gen_i, n, seed, mult):
+    """scale_rps multiplies a function's series linearly — the contract
+    scenarios.scale_trace_to_nodes relies on to hit a target cluster
+    size."""
+    gen = POPULATION_GENERATORS[gen_i]
+    fns = _fns(n)
+    unit = {fn: 1.0 for fn in fns}
+    scaled = {fn: float(mult) for fn in fns}
+    a = gen(fns, duration_s=90, seed=seed, scale_rps=unit)
+    b = gen(fns, duration_s=90, seed=seed, scale_rps=scaled)
+    for fn in fns:
+        assert np.allclose(b.rps[fn], a.rps[fn] * mult, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# flip: out-of-phase oscillation (§7.2 worst case)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 4), period=st.integers(12, 36),
+       rps=st.integers(1, 10))
+def test_flip_out_of_phase_invariant(n, period, rps):
+    duration = 8 * period
+    fns = _fns(n)
+    tr = flip_trace(fns, duration_s=duration, period_s=period,
+                    rps=float(rps))
+    base = tr.rps[fns[0]]
+    # two-valued 0 <-> rps oscillation with period `period`
+    for fn in fns:
+        assert set(np.unique(tr.rps[fn])) <= {0.0, float(rps)}
+        assert np.array_equal(tr.rps[fn][: duration - 2 * period],
+                              tr.rps[fn][2 * period:])
+    for i, fn in enumerate(fns):
+        off = i * period // n   # the generator's stagger per function
+        # each function is the first one time-shifted by i*step ...
+        assert np.array_equal(tr.rps[fn][: duration - off],
+                              base[off:] if off else base)
+        # ... and genuinely out of phase with it (shift within a cycle)
+        if 0 < off < 2 * period:
+            assert not np.array_equal(tr.rps[fn], base)
+
+
+# ---------------------------------------------------------------------------
+# timer: two-level alternation (§7.2 best case)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(period=st.integers(10, 60), n_inst=st.integers(1, 6),
+       rps_per_inst=st.integers(5, 30), n_periods=st.integers(2, 6))
+def test_timer_two_level_invariant(period, n_inst, rps_per_inst,
+                                   n_periods):
+    duration = n_periods * period
+    tr = timer_trace("f", duration_s=duration, period_s=period,
+                     rps_per_inst=float(rps_per_inst), n_inst=n_inst)
+    lo = rps_per_inst * n_inst * 0.95
+    hi = rps_per_inst * (n_inst + 2) * 0.95
+    series = tr.rps["f"]
+    assert set(np.unique(series)) <= {lo, hi}
+    for t in range(duration):
+        expect = lo if (t // period) % 2 == 0 else hi
+        assert series[t] == expect
+
+
+def test_flip_and_timer_duration_and_sign():
+    tr_f = flip_trace(_fns(3), duration_s=90, period_s=15)
+    tr_t = timer_trace("f", duration_s=90, period_s=15)
+    for tr in (tr_f, tr_t):
+        assert tr.duration_s == 90
+        for series in tr.rps.values():
+            assert series.shape == (90,)
+            assert (series >= 0.0).all()
