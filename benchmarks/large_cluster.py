@@ -54,6 +54,8 @@ def _result_row(kind: str, target_nodes: int, system: str, res,
         "mean_nodes": round(res.node_seconds / max(res.ticks, 1), 1),
         "peak_nodes": res.nodes_peak,
         "sched_ms_mean": round(s.mean_latency_ms, 4),
+        "sched_ms_p50": round(s.p50_latency_ms, 4),
+        "sched_ms_p99": round(s.p99_latency_ms, 4),
         "rows_per_schedule": round(s.critical_inference_rows / n_sched, 2),
         "fast_frac": round(s.fast / max(s.fast + s.slow, 1), 3),
         "nan_free": _series_nan_free(res),
@@ -172,6 +174,107 @@ def ab_parity(kind: str = "burst-storm", duration: int = 180,
     return record
 
 
+# ---------------------------------------------------------------------------
+# Online retraining at scale: --retrain-online
+# ---------------------------------------------------------------------------
+
+
+def retrain_online(quick: bool = False, seed: int = 0,
+                   target_nodes: int = 256) -> dict:
+    """Online incremental retraining + node-shape-aware capacities,
+    exercised at 256 nodes on the heterogeneous topology.
+
+    Runs the same scenario twice through the PredictionService path with
+    in-run retraining armed (schema v1, then schema v2) and reports, per
+    schema:
+
+      * retrain cost (forest refits) and the retrain-triggered
+        capacity-table refresh cost, separately from the
+        scheduling-critical-path cost (the paper's core accounting
+        split, extended to the retraining loop),
+      * the stale-epoch cache-hit counter — asserted **zero**: a
+        post-retrain lookup must never see a pre-retrain capacity,
+      * density / QoS — schema v2 must strictly increase admitted
+        density with a QoS violation rate no worse than v1's (the
+        node-shape-aware capacity lift on the mixed std/2x fleet).
+    """
+    duration = 150 if quick else 420
+    n_functions = 12 if quick else 24
+    n_train = 1600 if quick else 2600
+    n_trees = 16 if quick else 24
+    scenario = make_scenario("burst-storm", n_functions=n_functions,
+                             duration_s=duration,
+                             target_nodes=target_nodes, seed=seed,
+                             heterogeneous=True)
+    rows = []
+    for version in (1, 2):
+        world = scenario_world(scenario, n_train=n_train, n_trees=n_trees,
+                               max_depth=10, schema_version=version)
+        t0 = time.perf_counter()
+        sim = scenario_simulation(scenario, "jiagu", world=world,
+                                  collect_samples=True,
+                                  online_retrain=True, retrain_every=48,
+                                  sample_every_s=5)
+        res = sim.run()
+        wall = time.perf_counter() - t0
+        svc = sim.scheduler.engine
+        s = res.sched
+        row = {
+            "schema": f"v{version}", "target_nodes": target_nodes,
+            "duration_s": duration, "mean_nodes":
+                round(res.node_seconds / max(res.ticks, 1), 1),
+            "density": round(res.density, 3),
+            "qos_violation": round(res.qos_violation_rate, 4),
+            # scheduling-critical-path cost
+            "sched_ms_mean": round(s.mean_latency_ms, 4),
+            "sched_ms_p99": round(s.p99_latency_ms, 4),
+            "critical_rows": s.critical_inference_rows,
+            # background: async table updates vs retraining vs refresh
+            "async_rows": s.async_inference_rows,
+            "retrains": res.retrains,
+            "retrain_time_s": round(res.retrain_time_s, 2),
+            "refresh_rows": res.refresh_rows,
+            "refresh_time_s": round(res.refresh_time_s, 2),
+            "stale_epoch_hits": res.stale_epoch_hits,
+            "cache_epochs": svc.stats.cache_epochs,
+            "wall_s": round(wall, 1),
+        }
+        rows.append(row)
+        print(f"# retrain-online schema v{version}: "
+              f"density={row['density']} qos={row['qos_violation']} "
+              f"retrains={row['retrains']} "
+              f"retrain={row['retrain_time_s']}s "
+              f"refresh={row['refresh_time_s']}s "
+              f"sched_mean={row['sched_ms_mean']}ms ({row['wall_s']}s)",
+              flush=True)
+        # explicit raises, not asserts: gates must also fire under -O
+        if res.retrains < 1:
+            raise RuntimeError("retrain-online: no retrain fired "
+                               "(sampling cadence too sparse?)")
+        if res.stale_epoch_hits != 0:
+            raise RuntimeError(
+                f"retrain-online: {res.stale_epoch_hits} stale-epoch "
+                f"cache hits served (epoch invalidation broken)")
+    emit(rows)
+    v1, v2 = rows
+    if v2["density"] <= v1["density"]:
+        raise RuntimeError(
+            f"retrain-online: schema v2 density {v2['density']} did not "
+            f"exceed v1's {v1['density']} on the heterogeneous topology")
+    if v2["qos_violation"] > v1["qos_violation"] + 1e-9:
+        raise RuntimeError(
+            f"retrain-online: schema v2 QoS violation "
+            f"{v2['qos_violation']} worse than v1's "
+            f"{v1['qos_violation']}")
+    record = {"target_nodes": target_nodes, "duration_s": duration,
+              "n_functions": n_functions, "rows": rows}
+    save_artifact("retrain_online", record)
+    print(f"# retrain-online: v2/v1 density "
+          f"{v2['density'] / max(v1['density'], 1e-9):.3f}x, "
+          f"stale_epoch_hits=0 => PASS")
+    return record
+
+
 def run(quick: bool = False, seed: int = 0):
     sizes = [64, 128] if quick else [64, 128, 256, 512]
     kinds = STUDY_KINDS[:2] if quick else STUDY_KINDS
@@ -205,6 +308,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="2 scenario kinds x {64,128} nodes, short traces")
+    ap.add_argument("--retrain-online", action="store_true",
+                    help="256-node online-retraining + schema v1-vs-v2 "
+                         "node-shape capacity-lift study (skips the "
+                         "density sweep)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    run(quick=args.quick, seed=args.seed)
+    if args.retrain_online:
+        retrain_online(quick=args.quick, seed=args.seed)
+    else:
+        run(quick=args.quick, seed=args.seed)

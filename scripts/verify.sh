@@ -4,7 +4,9 @@
 #   scripts/verify.sh tests/...  any extra pytest args pass through
 #   scripts/verify.sh --full     tier-1 + slow-marked tests + the quick
 #                                large-cluster scenario benchmark (the
-#                                engine-default A/B gate end to end)
+#                                engine-default A/B gate end to end) +
+#                                the 256-node online-retraining / schema
+#                                v1-vs-v2 gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -12,6 +14,7 @@ if [ "${1:-}" = "--full" ]; then
     shift
     RUN_SLOW=1 python -m pytest -x -q "$@"
     python -m benchmarks.large_cluster --quick
+    python -m benchmarks.large_cluster --retrain-online --quick
     exit 0
 fi
 exec python -m pytest -x -q "$@"

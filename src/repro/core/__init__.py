@@ -3,10 +3,13 @@ paper's contribution), the RFR predictor, the cluster simulator, and the
 K8s/Gsight/Owl baselines."""
 from .autoscaler import Autoscaler, ScalingConfig, ScalingMetrics
 from .capacity import QOS_MULT, QoSStore, capacity_of, update_capacity_table
-from .capacity_engine import (CapacityEngine, EngineConfig, EngineStats,
-                              coloc_signature)
 from .cluster import CapEntry, Cluster, FuncState, Node
 from .interference import GroundTruth, NodeResources
+from .metrics import Reservoir
+from .prediction_service import (SCHEMA_V1, SCHEMA_V2, CapacityEngine,
+                                 EngineConfig, EngineStats, FeatureSchema,
+                                 PredictionService, coloc_signature,
+                                 get_schema)
 from .predictor import (MODEL_ZOO, PerfPredictor, RandomForestRegressor,
                         build_features)
 from .profiles import (BENCH_FUNCTIONS, FunctionSpec, ProfileStore,
@@ -23,11 +26,14 @@ from .scenarios import (LARGE_NODE, SCENARIO_KINDS, STANDARD_NODE,
 from .simulator import SimConfig, SimResult, Simulation, generate_dataset
 from .traces import (Trace, azure_sparse_trace, burst_storm_trace,
                      coldstart_churn_trace, diurnal_shift_trace, flip_trace,
-                     realworld_suite, realworld_trace, timer_trace)
+                     realworld_suite, realworld_trace, replay_trace,
+                     timer_trace)
 
 __all__ = [
     "Autoscaler", "ScalingConfig", "ScalingMetrics", "QOS_MULT", "QoSStore",
     "CapacityEngine", "EngineConfig", "EngineStats", "coloc_signature",
+    "PredictionService", "FeatureSchema", "SCHEMA_V1", "SCHEMA_V2",
+    "get_schema", "Reservoir", "replay_trace",
     "capacity_of", "update_capacity_table", "CapEntry", "Cluster",
     "FuncState", "Node", "GroundTruth", "NodeResources", "MODEL_ZOO",
     "PerfPredictor", "RandomForestRegressor", "build_features",

@@ -16,6 +16,7 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
 from .cluster import Cluster, Node
+from .metrics import Reservoir
 from .scheduler import REROUTE_MS, BaseScheduler, JiaguScheduler
 
 DEFAULT_KEEPALIVE_S = 60.0
@@ -40,12 +41,16 @@ class ScalingMetrics:
     migrations: int = 0
     releases: int = 0
     evictions: int = 0
-    cold_start_ms: List[float] = field(default_factory=list)
+    # bounded: long traces record one sample per (logical) cold start
+    cold_start_ms: Reservoir = field(default_factory=lambda: Reservoir(512))
 
     @property
     def mean_cold_start_ms(self) -> float:
-        return (sum(self.cold_start_ms) / len(self.cold_start_ms)
-                if self.cold_start_ms else 0.0)
+        return self.cold_start_ms.mean   # exact (running sum/count)
+
+    @property
+    def p99_cold_start_ms(self) -> float:
+        return self.cold_start_ms.p99
 
 
 class _CachedLedger:
@@ -237,16 +242,18 @@ class Autoscaler:
 
     def _node_capacity(self, node: Node, fn: str) -> Optional[int]:
         """Best known capacity of fn on node: the capacity-table entry,
-        else a zero-cost CapacityEngine cache hit (nodes that share a
-        colocation signature with an already-solved node get an answer
-        without any inference), else None."""
+        else a zero-cost PredictionService cache hit (nodes that share a
+        colocation signature — and, under schema v2, a node shape — with
+        an already-solved node get an answer without any inference),
+        else None."""
         entry = node.table.get(fn)
         if entry is not None:
             return entry.capacity
-        engine = getattr(self.scheduler, "engine", None)
-        if engine is None:
+        service = getattr(self.scheduler, "engine", None)
+        if service is None:
             return None
-        return engine.capacity_hint(engine.node_coloc(node), fn)
+        return service.capacity_hint(service.node_coloc(node), fn,
+                                     node_res=node.res)
 
     def _migrate(self, now: float):
         """Move cached instances off nodes where they could no longer be

@@ -102,9 +102,10 @@ def update_capacity_table(predictor: PerfPredictor, store: ProfileStore,
     """Recompute every entry of a node's capacity table (the asynchronous
     update).  Returns the number of inference rows used.
 
-    When a ``CapacityEngine`` is supplied the solve is delegated to it
-    (cached + coalesced + vectorized); the legacy per-function loop below
-    is the reference implementation the engine is tested against."""
+    When a ``PredictionService`` is supplied via ``engine`` the solve is
+    delegated to it (cached + coalesced + vectorized + node-shape-aware
+    under schema v2); the per-function loop below is the schema-v1
+    reference oracle the service's parity gates are tested against."""
     if engine is not None:
         return engine.update_node(node, m_max)
     from .cluster import CapEntry

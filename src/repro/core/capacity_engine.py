@@ -1,340 +1,17 @@
-"""Cluster-scale batched capacity engine.
+"""Cluster-scale batched capacity engine — compatibility surface.
 
-The legacy path (``capacity.capacity_of`` / ``update_capacity_table``)
-solves one (node, function) scenario at a time: it builds its feature
-matrix row-by-row in Python, sweeps m = 1..m_max exhaustively, and pays
-one ``predictor.predict`` call per function per node — so background
-inference cost grows linearly with cluster size.  The paper's own
-measurement (Fig. 17-b: batching 100 inputs into one inference adds
-~2 ms) says that cost should be paid *once per drain*, not once per node.
-
-``CapacityEngine`` owns all capacity solving for the cluster and applies
-three ideas:
-
-  1. **Coalescing** — all pending scenarios (every due node x every
-     colocated function) are drained together; each round builds one
-     feature matrix spanning every unresolved scenario and scores it with
-     a single ``PerfPredictor.predict_many`` call, which routes through
-     the numpy / jax / Pallas RFR engine so the VMEM-resident forest
-     kernel sees cluster-scale batches.
-
-  2. **Caching** — solved capacities are keyed by a canonical colocation
-     signature: the quantized multiset of ``(fn, n_sat, n_cached)`` of
-     the target's neighbors.  The many identically-loaded nodes of a
-     large cluster share one solve.  Keys are content-addressed, so any
-     placement / release / eviction changes the signature and naturally
-     misses; predictor retraining bumps the epoch and clears the cache.
-
-  3. **Vectorized assembly + early exit** — feature rows for a scenario
-     are assembled as numpy blocks broadcast over the m-sweep (no
-     per-row Python loop), and the sweep runs in geometrically growing
-     chunks so rows for hopeless concurrencies past the first QoS
-     failure are never built.
-
-Bit-compatibility contract: the assembled rows replicate ``build_features``
-float64 op-for-op (same accumulation order), so engine capacities are
-identical to the legacy per-node results — the parity tests and the
-24->512-node benchmark both assert it.
+The engine machinery grown in PR 1 (coalesced drains, the canonical
+colocation-signature cache, vectorized bit-identical feature assembly,
+chunked early-exit m-sweep) now lives in the unified
+``prediction_service`` module, where it shares one pipeline with the
+versioned feature schema, the schedulers' per-schedule inference, and
+the online-retraining loop.  ``CapacityEngine`` is a true alias of
+``PredictionService`` — one class, not a wrapper — so every PR-1 call
+site, test, and benchmark keeps working unchanged.
 """
-from __future__ import annotations
+from .prediction_service import (CapacityEngine, EngineConfig, EngineStats,
+                                 PredictionService, _Solve, _Template,
+                                 coloc_signature)
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
-
-from .capacity import M_MAX_DEFAULT, QoSStore
-from .cluster import CapEntry, Node
-from .predictor import N_FEATURES, PerfPredictor
-from .profiles import N_PROFILE, FunctionSpec, ProfileStore
-
-# feature layout (see predictor.build_features)
-_SOLO = 0
-_PROF = slice(1, 1 + N_PROFILE)
-_NSAT = 1 + N_PROFILE
-_NCACHED = 2 + N_PROFILE
-_AGG = slice(3 + N_PROFILE, 3 + 2 * N_PROFILE)
-_TOTSAT = 3 + 2 * N_PROFILE
-_TOTCACHED = 4 + 2 * N_PROFILE
-
-Coloc = Dict[str, Tuple[float, float]]
-SigKey = Tuple
-
-
-@dataclass
-class EngineConfig:
-    m_max: int = M_MAX_DEFAULT
-    cache: bool = True
-    early_exit: bool = True       # chunked m-sweep vs full legacy sweep
-    chunk_init: int = 4           # first chunk of the m-sweep
-    chunk_growth: int = 2         # geometric growth of later chunks
-    quant: float = 4.0            # signature quantization steps per unit
-    max_cache_entries: int = 65536
-
-
-@dataclass
-class EngineStats:
-    solves: int = 0               # scenarios requested
-    unique_solves: int = 0        # scenarios actually solved
-    cache_hits: int = 0
-    coalesced_dupes: int = 0      # same-signature scenarios within a drain
-    rows_built: int = 0
-    predict_calls: int = 0        # batched rounds issued to the predictor
-    cache_epochs: int = 0         # times the cache was cleared (retrain)
-
-    def snapshot(self) -> Dict[str, int]:
-        return dict(self.__dict__)
-
-
-def coloc_signature(coloc: Coloc, fn: str, m_max: int,
-                    quant: float = 4.0) -> SigKey:
-    """Canonical cache key for 'capacity of `fn` among `coloc`'.
-
-    The target's own counts are excluded (the m-sweep replaces them, as
-    in ``capacity_of``); neighbor counts are quantized to 1/quant steps
-    and sorted, so the key is a true multiset signature — two nodes with
-    the same colocation mix share one solve regardless of dict order.
-    """
-    q = max(quant, 1e-9)
-    sig = tuple(sorted(
-        (g, round(ns * q) / q, round(nc * q) / q)
-        for g, (ns, nc) in coloc.items() if g != fn and ns + nc > 0))
-    return (fn, int(m_max), sig)
-
-
-class _Template:
-    """Precomputed per-scenario constants for vectorized row assembly.
-
-    Rows for one m, in legacy order: [target@m, neighbor_1, ...].  Every
-    float64 accumulation mirrors build_features exactly:
-
-      target agg   = prof_f*m  then += prof_g*ns_g   (coloc order)
-      neighbor agg = (prof_g*ns_g + sum_{h!=g} prof_h*ns_h) + prof_f*m
-    """
-
-    def __init__(self, store: ProfileStore, qos: QoSStore,
-                 specs: Dict[str, FunctionSpec], coloc: Coloc, fn: str):
-        spec = specs[fn]
-        self.prof_f = store.profile(spec)
-        self.solo_f = qos.solo(spec)
-        self.qos_f = qos.qos(spec)
-        names = [g for g, (ns, nc) in coloc.items()
-                 if g != fn and ns + nc > 0]
-        counts = {g: coloc[g] for g in names}
-        self.neigh: List[Tuple[float, float, np.ndarray, float, float]] = []
-        contribs = {g: store.profile(specs[g]) * counts[g][0] for g in names}
-        for g in names:
-            ns, nc = counts[g]
-            gspec = specs[g]
-            # base_agg: prof_g*ns_g then += prof_h*ns_h for h != g in order
-            base = store.profile(gspec) * ns
-            for h in names:
-                if h != g:
-                    base = base + contribs[h]
-            self.neigh.append((ns, nc, store.profile(gspec),
-                               qos.solo(gspec), qos.qos(gspec), base))
-        self.contribs = [contribs[g] for g in names]
-        self.tot_sat_base = float(sum(c[0] for c in counts.values()))
-        self.tot_cached_base = float(sum(c[1] for c in counts.values()))
-        self.rows_per_m = 1 + len(self.neigh)
-        self.bounds_per_m = np.asarray(
-            [self.qos_f] + [nb[4] for nb in self.neigh])
-
-    def build(self, ms: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Feature matrix + QoS bounds for concurrencies `ms` (ascending).
-        Returns (len(ms)*rows_per_m, 31) float32 and matching bounds."""
-        c = len(ms)
-        R = self.rows_per_m
-        msf = ms.astype(np.float64)
-        X = np.empty((c, R, N_FEATURES), np.float64)
-        # target rows: n_sat = m, n_cached = 0
-        X[:, 0, _SOLO] = self.solo_f
-        X[:, 0, _PROF] = self.prof_f
-        X[:, 0, _NSAT] = msf
-        X[:, 0, _NCACHED] = 0.0
-        agg_t = msf[:, None] * self.prof_f
-        for contrib in self.contribs:
-            agg_t = agg_t + contrib
-        X[:, 0, _AGG] = agg_t
-        X[:, 0, _TOTSAT] = msf + self.tot_sat_base
-        X[:, 0, _TOTCACHED] = self.tot_cached_base
-        # neighbor rows: fn@m is their last-added neighbor
-        for j, (ns, nc, prof_g, solo_g, _qos_g, base) in \
-                enumerate(self.neigh):
-            r = j + 1
-            X[:, r, _SOLO] = solo_g
-            X[:, r, _PROF] = prof_g
-            X[:, r, _NSAT] = ns
-            X[:, r, _NCACHED] = nc
-            X[:, r, _AGG] = base + msf[:, None] * self.prof_f
-            X[:, r, _TOTSAT] = self.tot_sat_base + msf
-            X[:, r, _TOTCACHED] = self.tot_cached_base
-        bounds = np.tile(self.bounds_per_m, c)
-        return X.reshape(c * R, N_FEATURES).astype(np.float32), bounds
-
-
-class _Solve:
-    """State machine for one unique scenario's chunked m-sweep."""
-
-    def __init__(self, tmpl: _Template, m_max: int):
-        self.tmpl = tmpl
-        self.m_max = m_max
-        self.next_m = 1
-        self.capacity = 0
-        self.rows = 0
-        self.done = m_max <= 0
-
-    def take_chunk(self, size: int) -> np.ndarray:
-        hi = min(self.next_m + size - 1, self.m_max)
-        ms = np.arange(self.next_m, hi + 1)
-        self.next_m = hi + 1
-        return ms
-
-    def absorb(self, ms: np.ndarray, ok: np.ndarray):
-        """ok: (len(ms)*rows_per_m,) bool — pass/fail per feature row."""
-        per_m = self.tmpl.rows_per_m
-        blocks = ok.reshape(len(ms), per_m)
-        for i, m in enumerate(ms):
-            if blocks[i].all():
-                self.capacity = int(m)
-            else:
-                self.done = True
-                return
-        if self.next_m > self.m_max:
-            self.done = True
-
-
-class CapacityEngine:
-    """Owns all capacity solving for the cluster; see module docstring."""
-
-    def __init__(self, predictor: PerfPredictor, store: ProfileStore,
-                 qos: QoSStore, specs: Dict[str, FunctionSpec],
-                 cfg: Optional[EngineConfig] = None):
-        self.predictor = predictor
-        self.store = store
-        self.qos = qos
-        self.specs = specs
-        self.cfg = cfg or EngineConfig()
-        self.stats = EngineStats()
-        self._cache: Dict[SigKey, int] = {}
-        self._epoch = predictor.retrain_count
-
-    # -- cache ------------------------------------------------------------
-
-    def _check_epoch(self):
-        if self.predictor.retrain_count != self._epoch:
-            self.invalidate()
-            self._epoch = self.predictor.retrain_count
-
-    def invalidate(self):
-        """Drop every cached capacity (predictor retrained, or external
-        state the signatures cannot see has changed)."""
-        if self._cache:
-            self._cache.clear()
-        self.stats.cache_epochs += 1
-
-    def signature(self, coloc: Coloc, fn: str,
-                  m_max: Optional[int] = None) -> SigKey:
-        return coloc_signature(coloc, fn, m_max or self.cfg.m_max,
-                               self.cfg.quant)
-
-    def capacity_hint(self, coloc: Coloc, fn: str,
-                      m_max: Optional[int] = None) -> Optional[int]:
-        """Cached capacity for this colocation, or None.  Never runs
-        inference — safe on any non-critical decision path (migration
-        targeting, consolidation)."""
-        self._check_epoch()
-        return self._cache.get(self.signature(coloc, fn, m_max))
-
-    # -- solving ----------------------------------------------------------
-
-    def capacity(self, coloc: Coloc, fn: str,
-                 m_max: Optional[int] = None) -> Tuple[int, int]:
-        """Capacity of `fn` under `coloc`; returns (capacity, rows_built).
-        Same contract as ``capacity.capacity_of`` (cache hits bill 0)."""
-        return self.solve_many([(coloc, fn, m_max or self.cfg.m_max)])[0]
-
-    def solve_many(self, queries: Sequence[Tuple[Coloc, str, int]]
-                   ) -> List[Tuple[int, int]]:
-        """Solve many (coloc, fn, m_max) scenarios with coalesced batched
-        inference.  Duplicate signatures within the batch are solved once;
-        rows are billed to the first occurrence only."""
-        self._check_epoch()
-        self.stats.solves += len(queries)
-        results: List[Optional[Tuple[int, int]]] = [None] * len(queries)
-        unique: Dict[SigKey, _Solve] = {}
-        assignment: List[Optional[SigKey]] = [None] * len(queries)
-        for i, (coloc, fn, m_max) in enumerate(queries):
-            key = coloc_signature(coloc, fn, m_max, self.cfg.quant)
-            if self.cfg.cache and key in self._cache:
-                results[i] = (self._cache[key], 0)
-                self.stats.cache_hits += 1
-                continue
-            if key in unique:
-                self.stats.coalesced_dupes += 1
-            else:
-                unique[key] = _Solve(
-                    _Template(self.store, self.qos, self.specs, coloc, fn),
-                    m_max)
-                self.stats.unique_solves += 1
-            assignment[i] = key
-
-        active = [s for s in unique.values() if not s.done]
-        size = self.cfg.chunk_init if self.cfg.early_exit else \
-            max((s.m_max for s in active), default=1)
-        while active:
-            batch = []
-            for s in active:
-                ms = s.take_chunk(size)
-                X, bounds = s.tmpl.build(ms)
-                s.rows += len(X)
-                batch.append((s, ms, X, bounds))
-            self.stats.rows_built += sum(len(b[2]) for b in batch)
-            preds = self.predictor.predict_many([b[2] for b in batch])
-            self.stats.predict_calls += 1
-            for (s, ms, _X, bounds), p in zip(batch, preds):
-                s.absorb(ms, p <= bounds)
-            active = [s for s in active if not s.done]
-            size *= self.cfg.chunk_growth
-
-        for key, s in unique.items():
-            if self.cfg.cache:
-                if len(self._cache) >= self.cfg.max_cache_entries:
-                    self._cache.clear()
-                self._cache[key] = s.capacity
-        billed: set = set()
-        for i, key in enumerate(assignment):
-            if key is None:
-                continue
-            s = unique[key]
-            results[i] = (s.capacity, 0 if key in billed else s.rows)
-            billed.add(key)
-        return results  # type: ignore[return-value]
-
-    # -- node-level API (the async-update path) ---------------------------
-
-    def node_coloc(self, node: Node) -> Coloc:
-        return {g: (float(s.n_sat), float(s.n_cached))
-                for g, s in node.funcs.items() if s.total > 0}
-
-    def update_node(self, node: Node, m_max: Optional[int] = None) -> int:
-        return self.update_nodes([node], m_max)
-
-    def update_nodes(self, nodes: Sequence[Node],
-                     m_max: Optional[int] = None) -> int:
-        """Recompute every capacity-table entry of every node in one
-        coalesced drain.  Returns total inference rows billed."""
-        mm = m_max or self.cfg.m_max
-        queries: List[Tuple[Coloc, str, int]] = []
-        owners: List[Tuple[Node, str]] = []
-        for node in nodes:
-            coloc = self.node_coloc(node)
-            for fn in coloc:
-                queries.append((coloc, fn, mm))
-                owners.append((node, fn))
-        total_rows = 0
-        for (node, fn), (cap, rows) in zip(owners,
-                                           self.solve_many(queries)):
-            node.table[fn] = CapEntry(capacity=cap, fresh=True)
-            total_rows += rows
-        return total_rows
+__all__ = ["CapacityEngine", "EngineConfig", "EngineStats",
+           "PredictionService", "coloc_signature"]

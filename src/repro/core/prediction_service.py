@@ -1,0 +1,698 @@
+"""Unified prediction service: one pipeline behind every prediction
+entry point.
+
+Before this module, the prediction pipeline was duplicated across the
+stack: ``capacity.capacity_of`` built feature rows in Python loops,
+``capacity_engine.CapacityEngine`` re-implemented the same assembly
+vectorized, ``GsightScheduler`` and ``simulator._collect_sample`` each
+had their own ``build_features`` call sites, and the feature layout was
+a hard-coded 31-vector that could not express node size — so capacities
+on big nodes of a heterogeneous fleet silently inherited small-node
+predictions (conservative, never optimistic, but systematically wasteful).
+
+``PredictionService`` owns the whole pipeline:
+
+  * the **forest** (a ``PerfPredictor``) and its inference engine
+    selection (``engine={"numpy","jax","pallas"}``, routed through
+    ``repro.kernels.rfr_inference`` for the TPU hot path),
+  * a versioned **FeatureSchema** — v1 is the legacy 31-dim vector
+    (bit-identical to ``predictor.build_features``; the parity oracle),
+    v2 appends normalized node-shape features (cpu_mcores, mem_mb of the
+    *hosting* node) so one forest serves heterogeneous fleets,
+  * **batched capacity solving** — the coalesced / cached / vectorized
+    machinery grown in PR 1 (``CapacityEngine`` is now an alias of this
+    class): one ``predict_many`` pass per drain round, canonical
+    colocation-signature cache, chunked early-exit m-sweep,
+  * **epoch / retrain bookkeeping** — cache entries are tagged with the
+    forest epoch; ``on_samples()`` ingests runtime measurements and
+    applies the online retraining policy, bumping the epoch and clearing
+    the cache so a post-retrain lookup can never serve a pre-retrain
+    capacity (``stats.stale_epoch_hits`` counts any entry whose tag
+    mismatches the current epoch — it must stay 0, and the large-cluster
+    ``--retrain-online`` benchmark asserts it).
+
+``JiaguScheduler``, ``GsightScheduler``, ``update_capacity_table``, the
+autoscaler's capacity hints, and the simulator's runtime sample
+collection are all thin clients of this service.
+
+Bit-compatibility contract (schema v1): assembled rows replicate
+``build_features`` float64 op-for-op (same accumulation order), so
+service capacities are identical to the legacy per-node results — the
+parity tests and the 24->512-node benchmark both assert it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .capacity import M_MAX_DEFAULT, QoSStore
+from .cluster import CapEntry, Node
+from .interference import NodeResources
+from .predictor import N_FEATURES, PerfPredictor, build_features
+from .profiles import N_PROFILE, FunctionSpec, ProfileStore
+
+# v1 feature layout (see predictor.build_features)
+_SOLO = 0
+_PROF = slice(1, 1 + N_PROFILE)
+_NSAT = 1 + N_PROFILE
+_NCACHED = 2 + N_PROFILE
+_AGG = slice(3 + N_PROFILE, 3 + 2 * N_PROFILE)
+_TOTSAT = 3 + 2 * N_PROFILE
+_TOTCACHED = 4 + 2 * N_PROFILE
+
+#: the reference (profiling-node) shape node-size features normalize to
+REFERENCE_NODE = NodeResources()
+N_SHAPE_FEATURES = 2   # normalized (cpu_mcores, mem_mb) of the host node
+
+INFERENCE_ENGINES = ("numpy", "jax", "pallas")
+
+Coloc = Dict[str, Tuple[float, float]]
+SigKey = Tuple
+
+
+# ---------------------------------------------------------------------------
+# Versioned feature schema
+# ---------------------------------------------------------------------------
+
+
+class FeatureSchema:
+    """Versioned feature-vector layout shared by every prediction entry
+    point (capacity solving, per-schedule inference, runtime training
+    rows, offline dataset generation).
+
+      * **v1** — the paper's 31-dim function-granularity vector, built
+        by ``predictor.build_features``.  Node-shape-blind: predictions
+        made for the profiling-node shape apply to every node (the
+        conservative legacy behaviour, kept as the parity oracle).
+      * **v2** — node-shape-aware.  Two changes, both *normalized to
+        the reference profiling-node shape*:
+
+          1. every count/pressure column (the target's own sat/cached
+             counts, the concurrency-weighted aggregate profile, and the
+             node totals) is scaled by ``ref_cpu / host_cpu`` — a
+             colocation on a 2x node reads half the pressure, which
+             matches how the interference channels (cpu, bandwidth,
+             cache) dilute with node capacity and keeps rows from
+             differently-sized nodes on one latency manifold (appending
+             raw shape columns alone leaves same-pressure rows from
+             different shapes aliased, and raw counts at mismatched
+             ranges hand the trees spurious shape-correlated splits —
+             both make the forest optimistic in pockets);
+          2. ``N_SHAPE_FEATURES`` trailing columns carry the hosting
+             node's (cpu_mcores, mem_mb) normalized to the reference
+             shape — (2.0, 2.0) for a 2x node, (1.0, 1.0) standard —
+             so residual shape effects stay resolvable.
+
+        Trained with per-node-shape rows, the forest then resolves that
+        a given colocation pressures a big node less — big nodes stop
+        inheriting small-node capacities.  On the reference shape both
+        changes are identities, so v2 rows for standard nodes carry the
+        exact v1 prefix.
+    """
+
+    def __init__(self, version: int):
+        if version not in (1, 2):
+            raise ValueError(f"unknown feature-schema version {version!r}")
+        self.version = version
+        self.n_shape = 0 if version == 1 else N_SHAPE_FEATURES
+        self.n_features = N_FEATURES + self.n_shape
+
+    # -- node-shape block -------------------------------------------------
+
+    def shape_features(self, node_res: Optional[NodeResources] = None
+                       ) -> np.ndarray:
+        """The trailing shape block as float64 (empty for v1)."""
+        if self.version == 1:
+            return np.empty(0, np.float64)
+        nr = node_res or REFERENCE_NODE
+        return np.array([nr.cpu_mcores / REFERENCE_NODE.cpu_mcores,
+                         nr.mem_mb / REFERENCE_NODE.mem_mb], np.float64)
+
+    def pressure_scale(self, node_res: Optional[NodeResources] = None
+                       ) -> float:
+        """Scale of the node-level pressure block relative to the
+        reference shape (1.0 for v1 and for the reference node)."""
+        if self.version == 1 or node_res is None:
+            return 1.0
+        return REFERENCE_NODE.cpu_mcores / node_res.cpu_mcores
+
+    def shape_key(self, node_res: Optional[NodeResources],
+                  quant: float = 4.0) -> Tuple[float, ...]:
+        """Quantized shape block for cache signatures (empty for v1, so
+        v1 signatures stay exactly the PR-1 ``coloc_signature`` keys)."""
+        if self.version == 1:
+            return ()
+        q = max(quant, 1e-9)
+        return tuple(round(float(v) * q) / q
+                     for v in self.shape_features(node_res))
+
+    # -- row assembly -----------------------------------------------------
+
+    def build_row(self, solo_lat: float, profile: np.ndarray, n_sat: float,
+                  n_cached: float,
+                  neighbors: Sequence[Tuple[np.ndarray, float, float]],
+                  node_res: Optional[NodeResources] = None) -> np.ndarray:
+        """One feature row.  v1 delegates to ``build_features`` verbatim
+        (bit-identical); v2 rescales the node-level pressure block to
+        the hosting shape and appends the normalized shape columns."""
+        base = build_features(solo_lat, profile, n_sat, n_cached, neighbors)
+        if self.version == 1:
+            return base
+        row = base.astype(np.float64)
+        scale = self.pressure_scale(node_res)
+        if scale != 1.0:
+            row[_NSAT] *= scale
+            row[_NCACHED] *= scale
+            row[_AGG] *= scale
+            row[_TOTSAT] *= scale
+            row[_TOTCACHED] *= scale
+        return np.concatenate(
+            [row, self.shape_features(node_res)]).astype(np.float32)
+
+    def __repr__(self) -> str:
+        return f"FeatureSchema(v{self.version}, {self.n_features} features)"
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, FeatureSchema) and \
+            other.version == self.version
+
+    def __hash__(self) -> int:
+        return hash(("FeatureSchema", self.version))
+
+
+SCHEMA_V1 = FeatureSchema(1)
+SCHEMA_V2 = FeatureSchema(2)
+
+
+def get_schema(schema: Union[int, FeatureSchema, None]) -> FeatureSchema:
+    """Normalize an ``int`` version / schema object / None to a schema."""
+    if schema is None:
+        return SCHEMA_V1
+    if isinstance(schema, FeatureSchema):
+        return schema
+    return {1: SCHEMA_V1, 2: SCHEMA_V2}.get(schema) or FeatureSchema(schema)
+
+
+# ---------------------------------------------------------------------------
+# Solver configuration / telemetry
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EngineConfig:
+    m_max: int = M_MAX_DEFAULT
+    cache: bool = True
+    early_exit: bool = True       # chunked m-sweep vs full legacy sweep
+    chunk_init: int = 4           # first chunk of the m-sweep
+    chunk_growth: int = 2         # geometric growth of later chunks
+    quant: float = 4.0            # signature quantization steps per unit
+    max_cache_entries: int = 65536
+    # online retraining policy: retrain after this many on_samples() rows
+    # (None -> the predictor's own retrain_every)
+    retrain_every: Optional[int] = None
+    # Schema-v2 QoS safety margins: capacities must clear
+    # QoS / (1 + base + shape*distance), distance = |host/ref cpu - 1|.
+    # v2 predictions are boundary-accurate (v1's node-shape blindness
+    # made it accidentally conservative, absorbing forest noise for
+    # free), so v2 supplies the slack explicitly: a flat base margin on
+    # every shape plus a term growing with shape-extrapolation distance
+    # (profiling data is densest at the reference shape).  0 disables.
+    qos_margin_base: float = 0.06
+    shape_margin: float = 0.08
+
+
+@dataclass
+class EngineStats:
+    solves: int = 0               # scenarios requested
+    unique_solves: int = 0        # scenarios actually solved
+    cache_hits: int = 0
+    coalesced_dupes: int = 0      # same-signature scenarios within a drain
+    rows_built: int = 0
+    predict_calls: int = 0        # batched rounds issued to the predictor
+    cache_epochs: int = 0         # times the cache was cleared (retrain)
+    stale_epoch_hits: int = 0     # epoch-tag mismatches served (MUST be 0)
+    retrains: int = 0             # on_samples()-triggered retrains
+    retrain_time_s: float = 0.0   # forest refit wall time (background)
+    refresh_rows: int = 0         # post-retrain table-refresh rows
+    refresh_time_s: float = 0.0   # post-retrain table-refresh wall time
+
+    def snapshot(self) -> Dict[str, float]:
+        return dict(self.__dict__)
+
+
+def coloc_signature(coloc: Coloc, fn: str, m_max: int,
+                    quant: float = 4.0) -> SigKey:
+    """Canonical cache key for 'capacity of `fn` among `coloc`'.
+
+    The target's own counts are excluded (the m-sweep replaces them, as
+    in ``capacity_of``); neighbor counts are quantized to 1/quant steps
+    and sorted, so the key is a true multiset signature — two nodes with
+    the same colocation mix share one solve.
+    """
+    q = max(quant, 1e-9)
+    sig = tuple(sorted(
+        (g, round(ns * q) / q, round(nc * q) / q)
+        for g, (ns, nc) in coloc.items() if g != fn and ns + nc > 0))
+    return (fn, int(m_max), sig)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized scenario assembly + chunked sweep state
+# ---------------------------------------------------------------------------
+
+
+class _Template:
+    """Precomputed per-scenario constants for vectorized row assembly.
+
+    Rows for one m, in legacy order: [target@m, neighbor_1, ...].  Every
+    float64 accumulation mirrors build_features exactly:
+
+      target agg   = prof_f*m  then += prof_g*ns_g   (coloc order)
+      neighbor agg = (prof_g*ns_g + sum_{h!=g} prof_h*ns_h) + prof_f*m
+
+    Schema v2 appends the (constant per scenario) normalized node-shape
+    block as trailing columns; v1 layouts are bit-identical to PR 1.
+    """
+
+    def __init__(self, store: ProfileStore, qos: QoSStore,
+                 specs: Dict[str, FunctionSpec], coloc: Coloc, fn: str,
+                 schema: Optional[FeatureSchema] = None,
+                 node_res: Optional[NodeResources] = None,
+                 bound_scale: float = 1.0):
+        self.schema = schema or SCHEMA_V1
+        self.shape = self.schema.shape_features(node_res)
+        self.pressure_scale = self.schema.pressure_scale(node_res)
+        self.bound_scale = bound_scale
+        spec = specs[fn]
+        self.prof_f = store.profile(spec)
+        self.solo_f = qos.solo(spec)
+        self.qos_f = qos.qos(spec)
+        names = [g for g, (ns, nc) in coloc.items()
+                 if g != fn and ns + nc > 0]
+        counts = {g: coloc[g] for g in names}
+        self.neigh: List[Tuple[float, float, np.ndarray, float, float]] = []
+        contribs = {g: store.profile(specs[g]) * counts[g][0] for g in names}
+        for g in names:
+            ns, nc = counts[g]
+            gspec = specs[g]
+            # base_agg: prof_g*ns_g then += prof_h*ns_h for h != g in order
+            base = store.profile(gspec) * ns
+            for h in names:
+                if h != g:
+                    base = base + contribs[h]
+            self.neigh.append((ns, nc, store.profile(gspec),
+                               qos.solo(gspec), qos.qos(gspec), base))
+        self.contribs = [contribs[g] for g in names]
+        self.tot_sat_base = float(sum(c[0] for c in counts.values()))
+        self.tot_cached_base = float(sum(c[1] for c in counts.values()))
+        self.rows_per_m = 1 + len(self.neigh)
+        self.bounds_per_m = np.asarray(
+            [self.qos_f] + [nb[4] for nb in self.neigh]) * self.bound_scale
+
+    def build(self, ms: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Feature matrix + QoS bounds for concurrencies `ms` (ascending).
+        Returns (len(ms)*rows_per_m, n_features) float32 and bounds."""
+        c = len(ms)
+        R = self.rows_per_m
+        msf = ms.astype(np.float64)
+        X = np.empty((c, R, self.schema.n_features), np.float64)
+        # target rows: n_sat = m, n_cached = 0
+        X[:, 0, _SOLO] = self.solo_f
+        X[:, 0, _PROF] = self.prof_f
+        X[:, 0, _NSAT] = msf
+        X[:, 0, _NCACHED] = 0.0
+        agg_t = msf[:, None] * self.prof_f
+        for contrib in self.contribs:
+            agg_t = agg_t + contrib
+        X[:, 0, _AGG] = agg_t
+        X[:, 0, _TOTSAT] = msf + self.tot_sat_base
+        X[:, 0, _TOTCACHED] = self.tot_cached_base
+        # neighbor rows: fn@m is their last-added neighbor
+        for j, (ns, nc, prof_g, solo_g, _qos_g, base) in \
+                enumerate(self.neigh):
+            r = j + 1
+            X[:, r, _SOLO] = solo_g
+            X[:, r, _PROF] = prof_g
+            X[:, r, _NSAT] = ns
+            X[:, r, _NCACHED] = nc
+            X[:, r, _AGG] = base + msf[:, None] * self.prof_f
+            X[:, r, _TOTSAT] = self.tot_sat_base + msf
+            X[:, r, _TOTCACHED] = self.tot_cached_base
+        if self.schema.n_shape:
+            X[:, :, N_FEATURES:] = self.shape
+        out = X.reshape(c * R, self.schema.n_features).astype(np.float32)
+        if self.schema.n_shape and self.pressure_scale != 1.0:
+            # scale AFTER the float32 cast of the base block, mirroring
+            # build_row (float32 base -> float64 * scale -> float32), so
+            # solver rows are bitwise identical to training/per-schedule
+            # rows for every node shape, not just power-of-two ratios
+            for cols in (_NSAT, _NCACHED, _AGG, _TOTSAT, _TOTCACHED):
+                out[:, cols] = (out[:, cols].astype(np.float64)
+                                * self.pressure_scale).astype(np.float32)
+        bounds = np.tile(self.bounds_per_m, c)
+        return out, bounds
+
+
+class _Solve:
+    """State machine for one unique scenario's chunked m-sweep."""
+
+    def __init__(self, tmpl: _Template, m_max: int):
+        self.tmpl = tmpl
+        self.m_max = m_max
+        self.next_m = 1
+        self.capacity = 0
+        self.rows = 0
+        self.done = m_max <= 0
+
+    def take_chunk(self, size: int) -> np.ndarray:
+        hi = min(self.next_m + size - 1, self.m_max)
+        ms = np.arange(self.next_m, hi + 1)
+        self.next_m = hi + 1
+        return ms
+
+    def absorb(self, ms: np.ndarray, ok: np.ndarray):
+        """ok: (len(ms)*rows_per_m,) bool — pass/fail per feature row."""
+        per_m = self.tmpl.rows_per_m
+        blocks = ok.reshape(len(ms), per_m)
+        for i, m in enumerate(ms):
+            if blocks[i].all():
+                self.capacity = int(m)
+            else:
+                self.done = True
+                return
+        if self.next_m > self.m_max:
+            self.done = True
+
+
+# Internal query form: (coloc, fn, m_max, node_res)
+_Query = Tuple[Coloc, str, int, Optional[NodeResources]]
+
+
+class PredictionService:
+    """Owns the forest, the feature schema, batched capacity solving, the
+    colocation-signature cache, and epoch/retrain bookkeeping; see module
+    docstring.  ``CapacityEngine`` is an alias of this class."""
+
+    def __init__(self, predictor: PerfPredictor, store: ProfileStore,
+                 qos: QoSStore, specs: Dict[str, FunctionSpec],
+                 cfg: Optional[EngineConfig] = None, *,
+                 schema: Union[int, FeatureSchema, None] = None,
+                 engine: Optional[str] = None):
+        self.predictor = predictor
+        self.store = store
+        self.qos = qos
+        self.specs = specs
+        self.cfg = cfg or EngineConfig()
+        self.schema = get_schema(schema)
+        if engine is not None:
+            self.set_engine(engine)
+        self.stats = EngineStats()
+        self._cache: Dict[SigKey, Tuple[int, int]] = {}  # key -> (epoch, cap)
+        self._epoch = predictor.retrain_count
+        self._pending_samples = 0
+
+    # -- inference engine selection --------------------------------------
+
+    def set_engine(self, name: str):
+        """Select the RFR inference engine for every prediction issued
+        through this service (numpy / jax / pallas, the last routing
+        through the VMEM-resident ``kernels.rfr_inference`` path)."""
+        if name not in INFERENCE_ENGINES:
+            raise ValueError(f"unknown inference engine {name!r} "
+                             f"(have {INFERENCE_ENGINES})")
+        self.predictor.engine = name
+
+    @property
+    def inference_engine(self) -> str:
+        return self.predictor.engine
+
+    @property
+    def epoch(self) -> int:
+        """Current forest epoch (bumped by every retrain)."""
+        return self._epoch
+
+    # -- feature assembly (the build_features client surface) -------------
+
+    def feature_row(self, fn: str, n_sat: float, n_cached: float,
+                    coloc: Optional[Coloc] = None,
+                    node_res: Optional[NodeResources] = None) -> np.ndarray:
+        """One schema row for `fn` at (n_sat, n_cached) among `coloc`
+        (which may include fn itself; fn's entry is excluded from the
+        neighbor block) hosted on a ``node_res``-shaped node."""
+        spec = self.specs[fn]
+        neigh = [(self.store.profile(self.specs[g]), ns, nc)
+                 for g, (ns, nc) in (coloc or {}).items()
+                 if g != fn and ns + nc > 0]
+        return self.schema.build_row(self.qos.solo(spec),
+                                     self.store.profile(spec), n_sat,
+                                     n_cached, neigh, node_res)
+
+    def rows_for_coloc(self, coloc: Coloc,
+                       node_res: Optional[NodeResources] = None
+                       ) -> Tuple[List[str], np.ndarray, np.ndarray]:
+        """One row + QoS bound per function in `coloc` (dict order).
+
+        Bounds carry the schema-v2 safety margin (``qos_bound_scale``),
+        so per-schedule admission checks (Gsight) apply the same slack
+        as the capacity solver."""
+        scale = self.qos_bound_scale(node_res)
+        names, rows, bounds = [], [], []
+        for g, (ns, nc) in coloc.items():
+            if ns + nc <= 0:
+                continue
+            names.append(g)
+            rows.append(self.feature_row(g, ns, nc, coloc, node_res))
+            bounds.append(self.qos.qos(self.specs[g]) * scale)
+        return names, (np.stack(rows) if rows
+                       else np.empty((0, self.schema.n_features),
+                                     np.float32)), np.asarray(bounds)
+
+    # -- prediction -------------------------------------------------------
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        """One batched inference through the selected engine."""
+        return self.predictor.predict(X)
+
+    def predict_many(self, Xs: Sequence[np.ndarray]) -> List[np.ndarray]:
+        return self.predictor.predict_many(Xs)
+
+    # -- cache / epoch ----------------------------------------------------
+
+    def _check_epoch(self):
+        if self.predictor.retrain_count != self._epoch:
+            self.invalidate()
+            self._epoch = self.predictor.retrain_count
+
+    def invalidate(self):
+        """Drop every cached capacity (predictor retrained, or external
+        state the signatures cannot see has changed)."""
+        if self._cache:
+            self._cache.clear()
+        self.stats.cache_epochs += 1
+
+    def signature(self, coloc: Coloc, fn: str,
+                  m_max: Optional[int] = None,
+                  node_res: Optional[NodeResources] = None) -> SigKey:
+        key = coloc_signature(coloc, fn, m_max or self.cfg.m_max,
+                              self.cfg.quant)
+        shape = self.schema.shape_key(node_res, self.cfg.quant)
+        return key + (shape,) if shape else key
+
+    def _cache_get(self, key: SigKey) -> Optional[int]:
+        """Epoch-checked cache lookup.  An entry tagged with a different
+        epoch than the current forest must never be served: it is counted
+        (``stale_epoch_hits`` — asserted 0 by the retrain benchmarks,
+        since ``invalidate`` clears eagerly) and dropped."""
+        ent = self._cache.get(key)
+        if ent is None:
+            return None
+        epoch, cap = ent
+        if epoch != self._epoch:
+            self.stats.stale_epoch_hits += 1
+            del self._cache[key]
+            return None
+        return cap
+
+    def qos_bound_scale(self, node_res: Optional[NodeResources] = None
+                        ) -> float:
+        """Schema-v2 QoS tightening (1.0 under v1 — the parity paths
+        are untouched): flat base margin + shape-extrapolation term."""
+        if self.schema.version == 1:
+            return 1.0
+        margin = self.cfg.qos_margin_base
+        if node_res is not None and self.cfg.shape_margin:
+            r = node_res.cpu_mcores / REFERENCE_NODE.cpu_mcores
+            margin += self.cfg.shape_margin * abs(r - 1.0)
+        return 1.0 / (1.0 + margin)
+
+    def capacity_hint(self, coloc: Coloc, fn: str,
+                      m_max: Optional[int] = None,
+                      node_res: Optional[NodeResources] = None
+                      ) -> Optional[int]:
+        """Cached capacity for this colocation, or None.  Never runs
+        inference — safe on any non-critical decision path (migration
+        targeting, consolidation)."""
+        self._check_epoch()
+        return self._cache_get(self.signature(coloc, fn, m_max, node_res))
+
+    # -- solving ----------------------------------------------------------
+
+    def capacity(self, coloc: Coloc, fn: str, m_max: Optional[int] = None,
+                 node_res: Optional[NodeResources] = None
+                 ) -> Tuple[int, int]:
+        """Capacity of `fn` under `coloc` on a ``node_res``-shaped node;
+        returns (capacity, rows_built).  Same contract as
+        ``capacity.capacity_of`` (cache hits bill 0 rows)."""
+        return self.solve_many(
+            [(coloc, fn, m_max or self.cfg.m_max, node_res)])[0]
+
+    def solve_many(self, queries: Sequence[Tuple]
+                   ) -> List[Tuple[int, int]]:
+        """Solve many (coloc, fn, m_max[, node_res]) scenarios with
+        coalesced batched inference.  Duplicate signatures within the
+        batch are solved once; rows are billed to the first occurrence
+        only."""
+        norm: List[_Query] = [q if len(q) == 4 else (*q, None)
+                              for q in queries]
+        self._check_epoch()
+        self.stats.solves += len(norm)
+        results: List[Optional[Tuple[int, int]]] = [None] * len(norm)
+        unique: Dict[SigKey, _Solve] = {}
+        assignment: List[Optional[SigKey]] = [None] * len(norm)
+        for i, (coloc, fn, m_max, node_res) in enumerate(norm):
+            key = self.signature(coloc, fn, m_max, node_res)
+            if self.cfg.cache:
+                cap = self._cache_get(key)
+                if cap is not None:
+                    results[i] = (cap, 0)
+                    self.stats.cache_hits += 1
+                    continue
+            if key in unique:
+                self.stats.coalesced_dupes += 1
+            else:
+                unique[key] = _Solve(
+                    _Template(self.store, self.qos, self.specs, coloc, fn,
+                              self.schema, node_res,
+                              self.qos_bound_scale(node_res)), m_max)
+                self.stats.unique_solves += 1
+            assignment[i] = key
+
+        active = [s for s in unique.values() if not s.done]
+        size = self.cfg.chunk_init if self.cfg.early_exit else \
+            max((s.m_max for s in active), default=1)
+        while active:
+            batch = []
+            for s in active:
+                ms = s.take_chunk(size)
+                X, bounds = s.tmpl.build(ms)
+                s.rows += len(X)
+                batch.append((s, ms, X, bounds))
+            self.stats.rows_built += sum(len(b[2]) for b in batch)
+            preds = self.predictor.predict_many([b[2] for b in batch])
+            self.stats.predict_calls += 1
+            for (s, ms, _X, bounds), p in zip(batch, preds):
+                s.absorb(ms, p <= bounds)
+            active = [s for s in active if not s.done]
+            size *= self.cfg.chunk_growth
+
+        for key, s in unique.items():
+            if self.cfg.cache:
+                if len(self._cache) >= self.cfg.max_cache_entries:
+                    self._cache.clear()
+                self._cache[key] = (self._epoch, s.capacity)
+        billed: set = set()
+        for i, key in enumerate(assignment):
+            if key is None:
+                continue
+            s = unique[key]
+            results[i] = (s.capacity, 0 if key in billed else s.rows)
+            billed.add(key)
+        return results  # type: ignore[return-value]
+
+    # -- node-level API (the async-update path) ---------------------------
+
+    def node_coloc(self, node: Node) -> Coloc:
+        return {g: (float(s.n_sat), float(s.n_cached))
+                for g, s in node.funcs.items() if s.total > 0}
+
+    def update_node(self, node: Node, m_max: Optional[int] = None) -> int:
+        return self.update_nodes([node], m_max)
+
+    def update_nodes(self, nodes: Sequence[Node],
+                     m_max: Optional[int] = None) -> int:
+        """Recompute every capacity-table entry of every node in one
+        coalesced drain (node-shape-aware under schema v2).  Returns
+        total inference rows billed."""
+        mm = m_max or self.cfg.m_max
+        queries: List[_Query] = []
+        owners: List[Tuple[Node, str]] = []
+        for node in nodes:
+            coloc = self.node_coloc(node)
+            for fn in coloc:
+                queries.append((coloc, fn, mm, node.res))
+                owners.append((node, fn))
+        total_rows = 0
+        for (node, fn), (cap, rows) in zip(owners,
+                                           self.solve_many(queries)):
+            node.table[fn] = CapEntry(capacity=cap, fresh=True)
+            total_rows += rows
+        return total_rows
+
+    # -- online retraining (the runtime dataset-maintenance loop) ---------
+
+    def on_samples(self, X: Sequence[np.ndarray], y: Sequence[float],
+                   retrain: Optional[bool] = None) -> bool:
+        """Ingest runtime (features, label) measurements and apply the
+        online retraining policy.
+
+        ``retrain=None`` retrains once ``cfg.retrain_every`` (default:
+        the predictor's own ``retrain_every``) samples accumulated since
+        the last retrain; True forces one; False only accumulates.
+        Returns whether a retrain fired (callers then refresh capacity
+        tables off the critical path via ``refresh_tables``)."""
+        for xi, yi in zip(X, y):
+            self.predictor.add_sample(xi, yi, retrain=False)
+        self._pending_samples += len(y)
+        if retrain is None:
+            every = self.cfg.retrain_every \
+                if self.cfg.retrain_every is not None \
+                else self.predictor.retrain_every
+            retrain = self._pending_samples >= every
+        if retrain:
+            self.retrain()
+            return True
+        return False
+
+    def retrain(self):
+        """Refit the forest on the full accumulated dataset; bumps the
+        epoch and eagerly clears the signature cache so no post-retrain
+        lookup can see a pre-retrain capacity.  Wall time is billed to
+        ``stats.retrain_time_s`` (background work, never the scheduling
+        critical path)."""
+        t0 = time.perf_counter()
+        self.predictor.retrain()
+        self.stats.retrain_time_s += time.perf_counter() - t0
+        self.stats.retrains += 1
+        self._pending_samples = 0
+        self._check_epoch()     # epoch bump -> invalidate()
+
+    def refresh_tables(self, nodes: Sequence[Node],
+                       m_max: Optional[int] = None) -> int:
+        """Post-retrain capacity-table refresh over `nodes`, billed
+        separately (``stats.refresh_rows`` / ``refresh_time_s``) so the
+        retrain benchmarks can report table-refresh cost apart from both
+        retraining and scheduling-critical-path inference."""
+        t0 = time.perf_counter()
+        rows = self.update_nodes(nodes, m_max)
+        self.stats.refresh_time_s += time.perf_counter() - t0
+        self.stats.refresh_rows += rows
+        return rows
+
+
+#: PR-1 name for the service's batched-capacity surface; kept as a true
+#: alias (one class, no wrapper) so ``repro.engine.CapacityEngine`` and
+#: every existing call site keep working.
+CapacityEngine = PredictionService

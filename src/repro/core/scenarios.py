@@ -251,30 +251,41 @@ class ScenarioWorld:
     store: ProfileStore
     qos: QoSStore
     predictor: PerfPredictor
+    schema_version: int = 1
 
 
 def scenario_world(scenario: Scenario, *, n_train: int = 2000,
                    n_trees: int = 24, max_depth: int = 8,
-                   seed: Optional[int] = None) -> ScenarioWorld:
+                   seed: Optional[int] = None,
+                   schema_version: int = 1) -> ScenarioWorld:
     """Ground truth + profiles + a predictor trained offline on
-    profiling/training-node data (standard node class).
+    profiling/training-node data.
 
     Training colocations span more kinds and a deeper packing budget
     than the six-function paper world's defaults: Zipf-populated
     scenarios routinely pack 6+ kinds and >1.6x requested CPU onto a
     node, and the forest extrapolates flat (optimistically) past its
-    training ceiling — exactly where overcommitting breaks QoS."""
+    training ceiling — exactly where overcommitting breaks QoS.
+
+    ``schema_version=1`` trains the legacy node-shape-blind vector on
+    standard-shape rows only (predictions on bigger nodes stay
+    conservative — the parity oracle); ``schema_version=2`` emits
+    per-node-shape rows over the scenario's ``NodeClass`` mix so the
+    forest resolves node size."""
     s = scenario.seed if seed is None else seed
     gt = GroundTruth(node=scenario.standard_res, seed=s)
     store = ProfileStore(seed=s)
     qos = QoSStore(store, gt)
     pred = PerfPredictor(n_trees=n_trees, max_depth=max_depth, seed=s)
+    shapes = [cls.res for cls in scenario.node_classes] \
+        if schema_version >= 2 else None
     X, y = generate_dataset(
         scenario.specs, gt, store, qos, n_train, seed=s + 2,
         max_kinds=min(8, len(scenario.specs)), max_count=30,
-        budget_range=(0.25, 2.4))
+        budget_range=(0.25, 2.4), schema=schema_version,
+        node_shapes=shapes)
     pred.add_dataset(X, y)
-    return ScenarioWorld(scenario, gt, store, qos, pred)
+    return ScenarioWorld(scenario, gt, store, qos, pred, schema_version)
 
 
 def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
@@ -286,19 +297,33 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
                      keepalive_s: float = 60.0, init_ms: float = 8.4,
                      migrate: bool = True, m_max: int = M_MAX_DEFAULT,
                      use_engine: Optional[bool] = None,
-                     collect_samples: bool = False) -> Simulation:
+                     collect_samples: bool = False,
+                     schema_version: int = 1,
+                     online_retrain: bool = False,
+                     retrain_every: Optional[int] = None,
+                     sample_every_s: Optional[int] = None) -> Simulation:
     """The one scheduler-dispatch/autoscaler/SimConfig assembly, shared
     by ``scenario_simulation`` and ``benchmarks.common.make_sim``.
 
-    ``use_engine=None`` keeps the ``SimConfig`` default (CapacityEngine);
-    ``False`` forces the legacy per-node reference path — the A/B knob
-    the parity harness flips.
+    ``use_engine=None`` keeps the ``SimConfig`` default (the
+    PredictionService path); ``False`` forces the legacy per-node
+    reference path — the A/B knob the parity harness flips.
+    ``schema_version`` selects the feature schema of the attached
+    service (the predictor must be trained on matching rows) and
+    ``online_retrain``/``retrain_every`` arm the in-run incremental
+    retraining loop.
     """
     sched: BaseScheduler
     if scheduler == "jiagu":
         sched = JiaguScheduler(cluster, store, qos, predictor, m_max=m_max)
     elif scheduler == "gsight":
-        sched = GsightScheduler(cluster, store, qos, predictor)
+        from .prediction_service import EngineConfig, PredictionService
+        sched = GsightScheduler(
+            cluster, store, qos, predictor,
+            service=PredictionService(
+                predictor, store, qos, specs,
+                EngineConfig(m_max=m_max, retrain_every=retrain_every),
+                schema=schema_version))
     elif scheduler == "owl":
         sched = OwlScheduler(cluster, store, qos)
     elif scheduler == "k8s":
@@ -309,7 +334,12 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
         release_s=release_s, keepalive_s=keepalive_s,
         dual_staged=dual and scheduler == "jiagu", init_ms=init_ms,
         migrate=migrate))
-    cfg = SimConfig(collect_samples=collect_samples)
+    cfg = SimConfig(collect_samples=collect_samples,
+                    schema_version=schema_version,
+                    online_retrain=online_retrain,
+                    retrain_every=retrain_every)
+    if sample_every_s is not None:
+        cfg.sample_every_s = sample_every_s
     if use_engine is not None:
         cfg.use_capacity_engine = use_engine
     return Simulation(specs, trace, sched, aut, gt, store, qos,
@@ -323,16 +353,32 @@ def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
                         migrate: bool = True, m_max: int = M_MAX_DEFAULT,
                         use_engine: Optional[bool] = None,
                         collect_samples: bool = False,
+                        online_retrain: bool = False,
+                        retrain_every: Optional[int] = None,
+                        sample_every_s: Optional[int] = None,
                         n_train: int = 2000, n_trees: int = 24,
+                        schema_version: Optional[int] = None,
                         max_nodes: Optional[int] = None) -> Simulation:
     """Assemble a full Simulation for `scenario` (world built on demand,
-    heterogeneous elastic cluster from the scenario's node classes)."""
+    heterogeneous elastic cluster from the scenario's node classes).
+
+    The feature schema follows the world's (a v2-trained forest must see
+    v2 rows); pass ``schema_version`` only when building the world here.
+    """
     if world is None:
-        world = scenario_world(scenario, n_train=n_train, n_trees=n_trees)
+        world = scenario_world(scenario, n_train=n_train, n_trees=n_trees,
+                               schema_version=schema_version or 1)
+    elif schema_version not in (None, world.schema_version):
+        raise ValueError(
+            f"schema_version={schema_version} conflicts with the prebuilt "
+            f"world's schema v{world.schema_version}; rebuild the world "
+            f"with scenario_world(..., schema_version={schema_version})")
     pred = world.predictor if scheduler in ("jiagu", "gsight") else None
     return build_simulation(
         scenario.specs, scenario.trace, scenario.build_cluster(max_nodes),
         world.gt, world.store, world.qos, scheduler, pred, dual=dual,
         release_s=release_s, keepalive_s=keepalive_s, init_ms=init_ms,
         migrate=migrate, m_max=m_max, use_engine=use_engine,
-        collect_samples=collect_samples)
+        collect_samples=collect_samples, online_retrain=online_retrain,
+        retrain_every=retrain_every, sample_every_s=sample_every_s,
+        schema_version=world.schema_version)

@@ -19,7 +19,9 @@ import numpy as np
 from .capacity import M_MAX_DEFAULT, QoSStore, capacity_of, \
     update_capacity_table
 from .cluster import CapEntry, Cluster, Node
-from .predictor import PerfPredictor, build_features
+from .metrics import Reservoir
+from .predictor import PerfPredictor
+from .prediction_service import PredictionService
 from .profiles import FunctionSpec, ProfileStore
 
 FAST_PATH_MS = 0.05     # capacity-table lookup + comparison
@@ -34,7 +36,9 @@ class SchedMetrics:
     slow: int = 0
     failed: int = 0
     sched_time_ms: float = 0.0
-    sched_latencies: List[float] = field(default_factory=list)
+    # bounded: 512-node full-trace runs record one sample per decision
+    sched_latencies: Reservoir = field(
+        default_factory=lambda: Reservoir(512))
     critical_inference_rows: int = 0
     critical_inference_calls: int = 0
     async_inference_rows: int = 0
@@ -42,8 +46,15 @@ class SchedMetrics:
 
     @property
     def mean_latency_ms(self) -> float:
-        return (sum(self.sched_latencies) / len(self.sched_latencies)
-                if self.sched_latencies else 0.0)
+        return self.sched_latencies.mean   # exact (running sum/count)
+
+    @property
+    def p50_latency_ms(self) -> float:
+        return self.sched_latencies.p50
+
+    @property
+    def p99_latency_ms(self) -> float:
+        return self.sched_latencies.p99
 
 
 @dataclass
@@ -136,11 +147,13 @@ class JiaguScheduler(BaseScheduler):
 
     def __init__(self, cluster: Cluster, store: ProfileStore, qos: QoSStore,
                  predictor: PerfPredictor, m_max: int = M_MAX_DEFAULT,
-                 engine=None):
+                 engine: Optional[PredictionService] = None):
         super().__init__(cluster, store, qos)
         self.predictor = predictor
         self.m_max = m_max
-        self.engine = engine    # optional CapacityEngine (batched path)
+        # optional PredictionService (batched/cached solving; None keeps
+        # the legacy per-node reference path)
+        self.engine = engine
         self._pending: Dict[int, float] = {}  # node id -> due time
 
     # -- async update machinery -----------------------------------------
@@ -207,7 +220,7 @@ class JiaguScheduler(BaseScheduler):
         m_cap = min(self.m_max, have + need + 1)
         if self.engine is not None:
             cap, rows = self.engine.capacity(self._coloc_counts(node), fn,
-                                             m_cap)
+                                             m_cap, node_res=node.res)
         else:
             cap, rows = capacity_of(self.predictor, self.store, self.qos,
                                     self.cluster.specs,
@@ -343,36 +356,40 @@ class JiaguScheduler(BaseScheduler):
 class GsightScheduler(BaseScheduler):
     """Same predictor quality as Jiagu but coupled prediction/decision:
     every instance triggers per-candidate-node inference on the critical
-    path, with per-instance-granularity inputs (higher row counts)."""
+    path, with per-instance-granularity inputs (higher row counts).
+
+    Feature assembly and inference go through the shared
+    ``PredictionService`` (one self-constructed with the legacy v1
+    schema when none is supplied), so Gsight sees the same schema /
+    inference-engine selection as Jiagu."""
 
     name = "gsight"
 
     def __init__(self, cluster: Cluster, store: ProfileStore, qos: QoSStore,
-                 predictor: PerfPredictor, max_candidates: int = 4):
+                 predictor: PerfPredictor, max_candidates: int = 4,
+                 service: Optional[PredictionService] = None):
         super().__init__(cluster, store, qos)
         self.predictor = predictor
         self.max_candidates = max_candidates
+        self.service = service or PredictionService(
+            predictor, store, qos, cluster.specs)
 
     def _check_node(self, node: Node, fn: str) -> Tuple[bool, float]:
         """Predict everyone's latency with one more fn instance; per-
         instance granularity: one row per *instance* (not per function)."""
-        specs = self.cluster.specs
         coloc = {g: (float(s.n_sat), float(s.n_cached))
                  for g, s in node.funcs.items() if s.total > 0}
         coloc[fn] = (coloc.get(fn, (0.0, 0.0))[0] + 1,
                      coloc.get(fn, (0.0, 0.0))[1])
+        names, fn_rows, fn_bounds = self.service.rows_for_coloc(coloc,
+                                                                node.res)
         rows, bounds = [], []
-        for g, (ns, nc) in coloc.items():
-            gspec = specs[g]
-            neigh = [(self.store.profile(specs[h]), hs, hc)
-                     for h, (hs, hc) in coloc.items() if h != g]
-            row = build_features(self.qos.solo(gspec),
-                                 self.store.profile(gspec), ns, nc, neigh)
-            for _ in range(int(ns) or 1):  # instance granularity
+        for g, row, bound in zip(names, fn_rows, fn_bounds):
+            for _ in range(int(coloc[g][0]) or 1):  # instance granularity
                 rows.append(row)
-                bounds.append(self.qos.qos(gspec))
+                bounds.append(bound)
         t0 = time.perf_counter()
-        pred = self.predictor.predict(np.stack(rows))
+        pred = self.service.predict(np.stack(rows))
         ms = (time.perf_counter() - t0) * 1e3
         self.metrics.critical_inference_rows += len(rows)
         self.metrics.critical_inference_calls += 1

@@ -12,15 +12,17 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .autoscaler import Autoscaler, ScalingConfig, ScalingMetrics
 from .capacity import QoSStore
 from .cluster import Cluster
-from .interference import GroundTruth
+from .interference import GroundTruth, NodeResources
+from .metrics import Reservoir
 from .predictor import PerfPredictor, build_features
+from .prediction_service import get_schema
 from .profiles import FunctionSpec, ProfileStore
 from .scheduler import BaseScheduler, SchedMetrics
 from .traces import Trace
@@ -32,10 +34,21 @@ class SimConfig:
     sample_every_s: int = 20
     seed: int = 0
     # capacity-solve path: True (default since the full-trace A/B parity
-    # gate, tests/test_engine_parity.py) attaches a CapacityEngine to a
+    # gate, tests/test_engine_parity.py) attaches a PredictionService to a
     # Jiagu scheduler (coalesced/cached/vectorized cluster-scale solving);
     # False keeps the legacy per-node path as the reference oracle.
     use_capacity_engine: bool = True
+    # feature-schema version for the attached service: 1 = legacy
+    # node-shape-blind vector (the parity oracle), 2 = node-shape-aware
+    # (requires a predictor trained on v2 rows and the engine path)
+    schema_version: int = 1
+    # online incremental retraining: route runtime samples through
+    # PredictionService.on_samples (retrain + epoch-invalidate + refresh
+    # capacity tables during the run, all off the critical path)
+    online_retrain: bool = False
+    # samples between online retrains (None -> the predictor's own
+    # retrain_every)
+    retrain_every: Optional[int] = None
 
 
 @dataclass
@@ -47,7 +60,9 @@ class SimResult:
     instance_seconds: float = 0.0
     node_seconds: float = 0.0
     nodes_peak: int = 0
-    density_series: List[float] = field(default_factory=list)
+    # bounded uniform sample of the per-tick density series (512-node
+    # full traces would otherwise grow this without limit)
+    density_series: Reservoir = field(default_factory=lambda: Reservoir(512))
     per_fn_violations: Dict[str, float] = field(default_factory=dict)
     per_fn_requests: Dict[str, float] = field(default_factory=dict)
     sched: Optional[SchedMetrics] = None
@@ -55,6 +70,13 @@ class SimResult:
     inference_rows: int = 0
     inference_calls: int = 0
     mean_inference_ms: float = 0.0
+    # online-retraining accounting (deltas over this run's service stats;
+    # background work, reported separately from the critical path)
+    retrains: int = 0
+    retrain_time_s: float = 0.0
+    refresh_rows: int = 0
+    refresh_time_s: float = 0.0
+    stale_epoch_hits: int = 0
 
     @property
     def qos_violation_rate(self) -> float:
@@ -91,16 +113,41 @@ class Simulation:
         if (self.cfg.use_capacity_engine and predictor is not None
                 and getattr(scheduler, "engine", None) is None
                 and hasattr(scheduler, "m_max")):
-            from .capacity_engine import CapacityEngine, EngineConfig
-            scheduler.engine = CapacityEngine(
+            from .prediction_service import EngineConfig, PredictionService
+            scheduler.engine = PredictionService(
                 predictor, store, qos, specs,
-                EngineConfig(m_max=scheduler.m_max))
+                EngineConfig(m_max=scheduler.m_max,
+                             retrain_every=self.cfg.retrain_every),
+                schema=self.cfg.schema_version)
+        # the shared service (Jiagu's solver or Gsight's feature/predict
+        # client); the legacy per-node path has none
+        self._service = getattr(scheduler, "engine", None) or \
+            getattr(scheduler, "service", None)
+        if self._service is None and predictor is not None:
+            if self.cfg.schema_version != 1:
+                raise ValueError(
+                    "schema v2 requires the PredictionService path "
+                    "(use_capacity_engine=True); the legacy per-node "
+                    "solver only speaks the v1 feature layout")
+            if self.cfg.online_retrain:
+                raise ValueError(
+                    "online_retrain requires a PredictionService "
+                    "(use_capacity_engine=True); the legacy path has no "
+                    "on_samples retraining loop")
+        if (self._service is not None
+                and self._service.schema.version != self.cfg.schema_version):
+            raise ValueError(
+                f"scheduler's service speaks schema "
+                f"v{self._service.schema.version} but SimConfig requests "
+                f"v{self.cfg.schema_version}; pass a matching "
+                f"schema_version")
 
     # ------------------------------------------------------------------
 
     def run(self, duration_s: Optional[int] = None) -> SimResult:
         T = duration_s or self.trace.duration_s
         res = SimResult(name=self.scheduler.name, ticks=T)
+        svc0 = self._service.stats.snapshot() if self._service else {}
         for t in range(T):
             now = float(t)
             rps = {fn: self.trace.at(fn, t) for fn in self.trace.rps}
@@ -126,6 +173,18 @@ class Simulation:
             res.inference_rows = self.predictor.inference_count
             res.inference_calls = self.predictor.inference_calls
             res.mean_inference_ms = self.predictor.mean_inference_ms
+        if self._service is not None:
+            # deltas over this run (services may be shared across sims)
+            st = self._service.stats.snapshot()
+            res.retrains = int(st["retrains"] - svc0.get("retrains", 0))
+            res.retrain_time_s = \
+                st["retrain_time_s"] - svc0.get("retrain_time_s", 0.0)
+            res.refresh_rows = \
+                int(st["refresh_rows"] - svc0.get("refresh_rows", 0))
+            res.refresh_time_s = \
+                st["refresh_time_s"] - svc0.get("refresh_time_s", 0.0)
+            res.stale_epoch_hits = int(
+                st["stale_epoch_hits"] - svc0.get("stale_epoch_hits", 0))
         return res
 
     # ------------------------------------------------------------------
@@ -164,27 +223,59 @@ class Simulation:
         measure one random busy node's functions at saturated load and add
         (features, label) pairs to the predictor's dataset.
 
-        Only standard-shape nodes (matching the ground truth's profiling
-        node) are sampled: on a heterogeneous fleet, labels from larger
-        nodes would mix a different pressure scale into a feature space
-        that cannot express node size."""
+        Under schema v1 only standard-shape nodes (matching the ground
+        truth's profiling node) are sampled: on a heterogeneous fleet,
+        labels from larger nodes would mix a different pressure scale
+        into a feature space that cannot express node size.  Schema v2
+        encodes the node shape, so every busy node is sampleable and the
+        rows are measured against the *hosting* node's capacity.
+
+        With ``cfg.online_retrain`` the rows go through the service's
+        ``on_samples`` hook — the online retraining policy fires during
+        the run, bumping the forest epoch and refreshing all capacity
+        tables off the critical path."""
+        svc = self._service
+        v2 = svc is not None and svc.schema.version >= 2
         busy = [n for n in self.cluster.nodes.values()
                 if any(s.n_sat > 0 for s in n.funcs.values())
-                and n.res == self.gt.node]
+                and (v2 or n.res == self.gt.node)]
         if not busy:
             return
         node = busy[self._rng.integers(len(busy))]
         coloc = node.colocation(self.specs)
         counts = {g: (float(s[1]), float(s[2])) for g, s in coloc.items()}
+        node_res = node.res if v2 else None
+        Xs, ys = [], []
         for fn, (spec, n_sat, n_cached) in coloc.items():
             if n_sat <= 0:
                 continue
-            neigh = [(self.store.profile(self.specs[g]), ns, nc)
-                     for g, (ns, nc) in counts.items() if g != fn]
-            x = build_features(self.qos.solo(spec), self.store.profile(spec),
-                               n_sat, n_cached, neigh)
-            y = self.gt.measure(spec, coloc, load_frac=1.0)
-            self.predictor.add_sample(x, y, retrain=False)
+            if svc is not None:
+                x = svc.feature_row(fn, n_sat, n_cached, counts, node_res)
+            else:
+                neigh = [(self.store.profile(self.specs[g]), ns, nc)
+                         for g, (ns, nc) in counts.items() if g != fn]
+                x = build_features(self.qos.solo(spec),
+                                   self.store.profile(spec), n_sat,
+                                   n_cached, neigh)
+            y = self.gt.measure(spec, coloc, load_frac=1.0,
+                                node_res=node_res)
+            Xs.append(x)
+            ys.append(y)
+        if not Xs:
+            return
+        if svc is not None and self.cfg.online_retrain:
+            if svc.on_samples(Xs, ys) and hasattr(self.scheduler, "m_max"):
+                # retrain fired: every table entry in the cluster was
+                # computed by the old forest — refresh them all in one
+                # coalesced drain, billed to the service's refresh
+                # counters (background work, not the critical path).
+                # Only table-driven schedulers (Jiagu) need this; Gsight
+                # predicts per-schedule and never reads node.table.
+                svc.refresh_tables(list(self.cluster.nodes.values()),
+                                   self.scheduler.m_max)
+        else:
+            for x, yv in zip(Xs, ys):
+                self.predictor.add_sample(x, yv, retrain=False)
 
 
 # ---------------------------------------------------------------------------
@@ -196,7 +287,9 @@ def generate_dataset(specs: Dict[str, FunctionSpec], gt: GroundTruth,
                      store: ProfileStore, qos: QoSStore, n_samples: int,
                      seed: int = 0, max_kinds: int = 4, max_count: int = 24,
                      include_solo: bool = True,
-                     budget_range: Tuple[float, float] = (0.25, 1.6)
+                     budget_range: Tuple[float, float] = (0.25, 1.6),
+                     schema=None,
+                     node_shapes: Optional[Sequence[NodeResources]] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Random colocation scenarios measured against the ground truth —
     what the training nodes accumulate before the model converges.
@@ -212,7 +305,20 @@ def generate_dataset(specs: Dict[str, FunctionSpec], gt: GroundTruth,
     six-function world.  Large Zipf-populated scenarios pack small-slot
     functions deeper, so their worlds train with a wider range (the
     forest extrapolates *flat* past its training ceiling and would
-    otherwise under-predict exactly where overcommitting gets risky)."""
+    otherwise under-predict exactly where overcommitting gets risky).
+
+    ``schema``/``node_shapes`` select the feature-schema version and,
+    for schema v2, the fleet's node shapes: every sampled colocation is
+    hosted on one of the shapes (first = the standard profiling shape),
+    its rows carry the normalized shape block, and its labels are
+    measured against the *hosting* shape's capacity — the per-node-shape
+    training rows that stop big nodes inheriting small-node capacities.
+    The v1 default path is bit-identical to the pre-schema dataset."""
+    sch = get_schema(schema)
+    if sch.version >= 2:
+        return _generate_dataset_shaped(
+            sch, specs, gt, store, qos, n_samples, seed, max_kinds,
+            max_count, include_solo, budget_range, node_shapes)
     rng = np.random.default_rng(seed)
     names = sorted(specs)
     X, y = [], []
@@ -255,6 +361,79 @@ def generate_dataset(specs: Dict[str, FunctionSpec], gt: GroundTruth,
             X.append(build_features(qos.solo(spec), store.profile(spec),
                                     counts[fn][0], counts[fn][1], neigh))
             y.append(gt.measure(spec, coloc, load_frac=1.0))
+            if len(y) >= n_samples:
+                break
+    return np.stack(X), np.asarray(y, np.float64)
+
+
+def _generate_dataset_shaped(sch, specs: Dict[str, FunctionSpec],
+                             gt: GroundTruth, store: ProfileStore,
+                             qos: QoSStore, n_samples: int, seed: int,
+                             max_kinds: int, max_count: int,
+                             include_solo: bool,
+                             budget_range: Tuple[float, float],
+                             node_shapes: Optional[Sequence[NodeResources]]
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+    """Schema-v2 dataset: per-node-shape training rows.
+
+    Counts and packing budgets scale with the hosting shape's CPU
+    relative to the standard shape (``shapes[0]``), so a 2x node trains
+    on colocations twice as deep — exactly the region where its v2
+    capacities must exceed the standard node's."""
+    rng = np.random.default_rng(seed)
+    names = sorted(specs)
+    shapes: List[NodeResources] = list(node_shapes or [gt.node])
+    ref_cpu = shapes[0].cpu_mcores
+    X, y = [], []
+    max_kinds = min(max_kinds, len(names))
+    if include_solo:
+        for shape in shapes:
+            for fn in names:
+                spec = specs[fn]
+                m_hi = max(2, int(1.3 * shape.cpu_mcores / spec.cpu_req))
+                m_hi = min(m_hi, 2 * max(
+                    1, int(round(max_count * shape.cpu_mcores / ref_cpu))))
+                # subsample deep sweeps: big shapes would otherwise
+                # contribute O(100) interference-free rows per function
+                # and drown the colocation samples the capacity
+                # boundary is learned from
+                ms = range(1, m_hi + 1) if m_hi <= 16 else sorted(
+                    set(np.linspace(1, m_hi, 16).round().astype(int)))
+                for m in ms:
+                    coloc = {fn: (spec, float(m), 0.0)}
+                    if not gt.fits(coloc, node_res=shape):
+                        break
+                    X.append(sch.build_row(
+                        qos.solo(spec), store.profile(spec), float(m), 0.0,
+                        [], node_res=shape))
+                    y.append(gt.measure(spec, coloc, load_frac=1.0,
+                                        node_res=shape))
+    while len(y) < n_samples:
+        shape = shapes[rng.integers(len(shapes))]
+        cap_count = max(1, int(round(max_count * shape.cpu_mcores
+                                     / ref_cpu)))
+        kinds = rng.choice(names, size=rng.integers(1, max_kinds + 1),
+                           replace=False)
+        budget = rng.uniform(*budget_range) * shape.cpu_mcores
+        shares = rng.dirichlet(np.ones(len(kinds)))
+        coloc = {}
+        for k, share in zip(kinds, shares):
+            n_sat = int(round(share * budget / specs[k].cpu_req))
+            n_sat = min(max(n_sat, 1), cap_count)
+            n_cached = int(rng.integers(0, 3))
+            coloc[k] = (specs[k], float(n_sat), float(n_cached))
+        if not gt.fits(coloc, node_res=shape):
+            continue
+        counts = {g: (c[1], c[2]) for g, c in coloc.items()}
+        for fn in kinds:
+            spec = specs[fn]
+            neigh = [(store.profile(specs[g]), ns, nc)
+                     for g, (ns, nc) in counts.items() if g != fn]
+            X.append(sch.build_row(qos.solo(spec), store.profile(spec),
+                                   counts[fn][0], counts[fn][1], neigh,
+                                   node_res=shape))
+            y.append(gt.measure(spec, coloc, load_frac=1.0,
+                                node_res=shape))
             if len(y) >= n_samples:
                 break
     return np.stack(X), np.asarray(y, np.float64)

@@ -265,6 +265,63 @@ def azure_sparse_trace(fn_names: List[str], duration_s: int = 3600,
     return Trace(name or f"azure-sparse-seed{seed}", out, duration_s)
 
 
+def replay_trace(path, name: str | None = None,
+                 duration_s: int | None = None) -> Trace:
+    """Replay a real invocation dump behind the same ``Trace`` interface.
+
+    Reads an Azure/Huawei-style CSV with ``fn,timestamp,rps`` rows
+    (timestamp in seconds, absolute or relative; a header line and
+    ``#`` comments are skipped).  Timestamps are normalized to the
+    earliest entry and bucketed at 1 s resolution; multiple records of
+    one function landing in the same second accumulate.  Functions keep
+    zero RPS outside their recorded entries, exactly like the sparse
+    generated traces.
+    """
+    import os
+    entries: List[Tuple[str, float, float]] = []
+    first_data_line = True
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = [p.strip() for p in line.split(",")]
+            if len(parts) < 3:
+                raise ValueError(
+                    f"{path}:{i + 1}: expected 'fn,timestamp,rps', "
+                    f"got {line!r}")
+            try:
+                ts, rps = float(parts[1]), float(parts[2])
+            except ValueError:
+                if first_data_line:      # tolerated header line (only)
+                    first_data_line = False
+                    continue
+                raise ValueError(
+                    f"{path}:{i + 1}: non-numeric timestamp/rps "
+                    f"in {line!r}")
+            first_data_line = False
+            if not (math.isfinite(ts) and math.isfinite(rps)):
+                raise ValueError(
+                    f"{path}:{i + 1}: non-finite timestamp/rps "
+                    f"in {line!r}")
+            if rps < 0:
+                raise ValueError(f"{path}:{i + 1}: negative rps {rps}")
+            entries.append((parts[0], ts, rps))
+    if not entries:
+        raise ValueError(f"{path}: no trace entries")
+    t0 = math.floor(min(ts for _, ts, _r in entries))
+    T = duration_s or int(math.floor(max(ts for _, ts, _r in entries)
+                                     - t0)) + 1
+    out: Dict[str, np.ndarray] = {}
+    for fn, ts, rps in entries:
+        series = out.setdefault(fn, np.zeros(T))
+        sec = int(ts - t0)
+        if 0 <= sec < T:
+            series[sec] += rps
+    return Trace(name or os.path.splitext(os.path.basename(str(path)))[0],
+                 out, T)
+
+
 def flip_trace(fns: List[str], duration_s: int = 600,
                period_s: int = 30, rps: float = 5.0) -> Trace:
     """Worst case (§7.2): each function's concurrency flips 0 <-> 1 so the

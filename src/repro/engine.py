@@ -1,13 +1,18 @@
-"""Public export surface for the cluster-scale capacity engine.
+"""Public export surface for the unified prediction service.
 
-    from repro.engine import CapacityEngine, EngineConfig
+    from repro.engine import PredictionService, FeatureSchema
 
-The engine coalesces all pending capacity solves into batched predictor
-passes, caches results by canonical colocation signature, and assembles
-feature matrices vectorized — see ``repro.core.capacity_engine``.
+``PredictionService`` owns the forest, the versioned feature schema
+(v1 legacy / v2 node-shape-aware), batched+cached capacity solving,
+inference-engine selection (numpy / jax / pallas), and epoch/retrain
+bookkeeping — see ``repro.core.prediction_service``.  ``CapacityEngine``
+is the PR-1 name for the same class, kept as a true alias.
 """
-from .core.capacity_engine import (CapacityEngine, EngineConfig,
-                                   EngineStats, coloc_signature)
+from .core.prediction_service import (SCHEMA_V1, SCHEMA_V2, CapacityEngine,
+                                      EngineConfig, EngineStats,
+                                      FeatureSchema, PredictionService,
+                                      coloc_signature, get_schema)
 
-__all__ = ["CapacityEngine", "EngineConfig", "EngineStats",
-           "coloc_signature"]
+__all__ = ["CapacityEngine", "PredictionService", "EngineConfig",
+           "EngineStats", "FeatureSchema", "SCHEMA_V1", "SCHEMA_V2",
+           "get_schema", "coloc_signature"]

@@ -68,7 +68,24 @@ def ssd_op(x, dt, A, Bm, Cm, h0=None, *, chunk=256, use_pallas=True,
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def rfr_op(x, feat, thr, leaf, *, use_pallas=True, interpret=True):
-    """Forest inference: x (N, F) -> (N,) predictions."""
+    """Forest inference: x (N, F) -> (N,) predictions.
+
+    ``use_pallas=False`` is the pure-jnp gather engine (the predictor's
+    ``engine="jax"``): level-synchronous descent with vectorized gathers,
+    traceable under jit — the numpy ``ref.rfr_forest_ref`` oracle cannot
+    run inside a traced function."""
     if use_pallas:
         return rfr_forest_apply(x, feat, thr, leaf, interpret=interpret)
-    return ref.rfr_forest_ref(x, feat, thr, leaf)
+    N = x.shape[0]
+    T, NN = feat.shape
+    depth = (NN + 1).bit_length() - 1
+    t_ids = jnp.arange(T)[None, :]                       # (1, T)
+    idx = jnp.zeros((N, T), jnp.int32)
+    rows = jnp.arange(N)[:, None]                        # (N, 1)
+    for _ in range(depth):
+        f = feat[t_ids, idx]                             # (N, T)
+        t = thr[t_ids, idx]
+        go_right = (x[rows, f] >= t).astype(jnp.int32)
+        idx = 2 * idx + 1 + go_right
+    vals = leaf[t_ids, idx - NN]
+    return jnp.mean(vals, axis=1).astype(jnp.float32)

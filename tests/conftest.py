@@ -1,6 +1,7 @@
 import os
 import sys
 
+import numpy as np
 import pytest
 
 # src layout import path (tests run with or without PYTHONPATH=src)
@@ -8,6 +9,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # NOTE: no xla_force_host_platform_device_count here — smoke tests and
 # benches must see 1 device (the dry-run sets its own flag in-process).
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_global_rng():
+    """Every test starts from the same legacy global numpy RNG state, so
+    forest-dependent tests cannot depend on test/collection order (safe
+    under ``pytest -p no:randomly`` and any reordering plugin).  All
+    repro code seeds explicit ``default_rng`` instances; this pins down
+    test-local and third-party ``np.random`` use."""
+    np.random.seed(20260727)
+    yield
 
 
 def pytest_configure(config):

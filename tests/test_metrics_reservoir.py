@@ -1,0 +1,60 @@
+"""Bounded metric reservoirs: exact aggregates, list-protocol drop-in
+behaviour, and bounded memory on long runs."""
+import numpy as np
+import pytest
+
+from repro.core import Reservoir
+from repro.core.scheduler import SchedMetrics
+
+
+def test_exact_history_below_capacity():
+    r = Reservoir(cap=8)
+    r.extend([3.0, 1.0, 2.0])
+    assert list(r) == [3.0, 1.0, 2.0]
+    assert r[-2:] == [1.0, 2.0]          # slicing (autoscaler tests use it)
+    assert len(r) == 3 and r.count == 3
+    assert r.mean == pytest.approx(2.0)
+    assert r.p50 == pytest.approx(2.0)   # exact while count <= cap
+    assert r.min == 1.0 and r.max == 3.0
+
+
+def test_bounded_size_with_exact_running_aggregates():
+    r = Reservoir(cap=64, seed=1)
+    xs = np.linspace(0.0, 1.0, 10_000)
+    r.extend(xs)
+    assert len(r) == 64                  # memory stays bounded
+    assert r.count == 10_000             # ...but the count is exact
+    assert r.mean == pytest.approx(float(xs.mean()))   # exact running sum
+    assert r.max == 1.0 and r.min == 0.0
+    # the uniform sample keeps quantiles in the right neighbourhood
+    assert abs(r.p50 - 0.5) < 0.2
+    assert r.p99 > 0.7
+
+
+def test_same_sequence_same_retained_indices():
+    """Two reservoirs fed the same sequence retain the same positions —
+    the property the engine-vs-legacy density_series parity relies on."""
+    a, b = Reservoir(cap=16, seed=0), Reservoir(cap=16, seed=0)
+    xs = np.arange(200.0)
+    a.extend(xs)
+    b.extend(xs * 2.0)
+    assert np.array_equal(np.asarray(a) * 2.0, np.asarray(b))
+
+
+def test_numpy_protocol_and_empty_behaviour():
+    r = Reservoir(cap=4)
+    assert not r
+    assert r.mean == 0.0 and r.p99 == 0.0 and r.max == 0.0
+    assert np.asarray(r, dtype=np.float64).shape == (0,)
+    r.append(5)
+    assert np.isfinite(np.asarray(r)).all()
+    with pytest.raises(ValueError):
+        Reservoir(cap=0)
+
+
+def test_sched_metrics_expose_exact_percentile_accessors():
+    m = SchedMetrics()
+    m.sched_latencies.extend([1.0, 2.0, 3.0, 100.0])
+    assert m.mean_latency_ms == pytest.approx(26.5)
+    assert m.p50_latency_ms == pytest.approx(2.5)
+    assert m.p99_latency_ms > 90.0

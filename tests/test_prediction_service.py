@@ -1,0 +1,291 @@
+"""PredictionService: the unified prediction pipeline.
+
+Covers the versioned feature schema (v1 bit-identical to the legacy
+vector, v2 node-shape-aware), the three-entry-point capacity parity
+(legacy loop / update_capacity_table delegation / service API), the
+epoch-invalidation contract under retraining (signature-cache entries
+from epoch N must never serve an epoch N+1 lookup — asserted via a
+canary forest swap and the stale-epoch counter), the on_samples online
+retraining policy, and online retraining exercised inside a full
+simulation run."""
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, GroundTruth, NodeResources,
+                        PerfPredictor, PredictionService, ProfileStore,
+                        QoSStore, SCHEMA_V1, SCHEMA_V2, FeatureSchema,
+                        capacity_of, generate_dataset, get_schema,
+                        make_scenario, scenario_simulation, scenario_world,
+                        synthetic_functions, update_capacity_table)
+from repro.core.cluster import Node
+from repro.core.predictor import N_FEATURES, build_features
+
+BIG = NodeResources(cpu_mcores=96_000.0, mem_mb=262_144.0,
+                    mem_bw_gbps=136.0, llc_mb=120.0)
+
+
+@pytest.fixture(scope="module")
+def world():
+    specs = synthetic_functions(5, seed=2)
+    gt = GroundTruth(seed=0)
+    store = ProfileStore(seed=0)
+    qos = QoSStore(store, gt)
+    pred = PerfPredictor(n_trees=10, max_depth=7, seed=0)
+    X, y = generate_dataset(specs, gt, store, qos, 600, seed=1)
+    pred.add_dataset(X, y)
+    return specs, gt, store, qos, pred
+
+
+def _service(world, **kw):
+    specs, gt, store, qos, pred = world
+    cfg = EngineConfig(**{k: v for k, v in kw.items()
+                          if k not in ("schema", "predictor")})
+    return PredictionService(kw.get("predictor", pred), store, qos, specs,
+                             cfg, schema=kw.get("schema"))
+
+
+# ---------------------------------------------------------------------------
+# Feature schema
+# ---------------------------------------------------------------------------
+
+
+def test_schema_versions_and_lookup():
+    assert SCHEMA_V1.version == 1 and SCHEMA_V1.n_features == N_FEATURES
+    assert SCHEMA_V2.version == 2 and \
+        SCHEMA_V2.n_features == N_FEATURES + 2
+    assert get_schema(None) is SCHEMA_V1
+    assert get_schema(2) is SCHEMA_V2
+    assert get_schema(SCHEMA_V2) is SCHEMA_V2
+    assert SCHEMA_V1 == FeatureSchema(1) and SCHEMA_V1 != SCHEMA_V2
+    with pytest.raises(ValueError):
+        FeatureSchema(3)
+
+
+def test_schema_v1_row_bit_identical_to_legacy(world):
+    specs, gt, store, qos, pred = world
+    names = sorted(specs)
+    prof = store.profile(specs[names[0]])
+    neigh = [(store.profile(specs[names[1]]), 3.0, 1.0),
+             (store.profile(specs[names[2]]), 2.0, 0.0)]
+    legacy = build_features(qos.solo(specs[names[0]]), prof, 4.0, 1.0,
+                            neigh)
+    row = SCHEMA_V1.build_row(qos.solo(specs[names[0]]), prof, 4.0, 1.0,
+                              neigh)
+    assert row.dtype == legacy.dtype == np.float32
+    assert np.array_equal(row, legacy)          # bitwise
+    # v1 is node-shape-blind even when a shape is supplied
+    row_big = SCHEMA_V1.build_row(qos.solo(specs[names[0]]), prof, 4.0,
+                                  1.0, neigh, node_res=BIG)
+    assert np.array_equal(row_big, legacy)
+
+
+def test_schema_v2_appends_normalized_shape(world):
+    specs, gt, store, qos, pred = world
+    names = sorted(specs)
+    prof = store.profile(specs[names[0]])
+    v1 = SCHEMA_V1.build_row(qos.solo(specs[names[0]]), prof, 2.0, 0.0, [])
+    std = SCHEMA_V2.build_row(qos.solo(specs[names[0]]), prof, 2.0, 0.0, [])
+    big = SCHEMA_V2.build_row(qos.solo(specs[names[0]]), prof, 2.0, 0.0,
+                              [], node_res=BIG)
+    assert np.array_equal(std[:N_FEATURES], v1)   # v1 prefix untouched
+    assert np.allclose(std[N_FEATURES:], [1.0, 1.0])   # reference shape
+    assert np.allclose(big[N_FEATURES:], [2.0, 2.0])   # 2x node
+    # the shape lands in the cache signature (v2) but not in v1's
+    svc1 = _service(world, m_max=8)
+    svc2 = _service(world, m_max=8, schema=2)
+    coloc = {names[1]: (2.0, 0.0)}
+    assert svc1.signature(coloc, names[0], node_res=BIG) == \
+        svc1.signature(coloc, names[0])
+    assert svc2.signature(coloc, names[0], node_res=BIG) != \
+        svc2.signature(coloc, names[0])
+
+
+def test_inference_engine_selection(world):
+    svc = _service(world)
+    assert svc.inference_engine == "numpy"
+    with pytest.raises(ValueError, match="unknown inference engine"):
+        svc.set_engine("tensorflow")
+    svc.set_engine("numpy")
+    assert svc.predictor.engine == "numpy"
+
+
+def test_all_inference_engines_agree_on_capacities(world):
+    """The uniform engine surface: numpy, jax (jnp gathers), and pallas
+    (interpret-mode kernel on CPU) solve identical capacities through
+    ``kernels.rfr_inference`` / ``kernels.ops.rfr_op``."""
+    specs, gt, store, qos, pred = world
+    svc = _service(world, m_max=8)
+    names = sorted(specs)
+    coloc = {names[1]: (2.0, 1.0), names[2]: (1.0, 0.0)}
+    caps = {}
+    for eng in ("numpy", "jax", "pallas"):
+        svc.set_engine(eng)
+        svc.invalidate()
+        caps[eng], _ = svc.capacity(dict(coloc), names[0])
+    svc.set_engine("numpy")
+    assert caps["numpy"] == caps["jax"] == caps["pallas"]
+
+
+# ---------------------------------------------------------------------------
+# Three-entry-point capacity parity (schema v1)
+# ---------------------------------------------------------------------------
+
+
+def test_v1_capacity_parity_legacy_vs_delegation_vs_service(world):
+    """The acceptance gate at node level: the legacy per-node loop, the
+    ``update_capacity_table(engine=...)`` delegation, and the service's
+    own ``update_nodes`` produce identical capacity tables."""
+    specs, gt, store, qos, pred = world
+    names = sorted(specs)
+    rng = np.random.default_rng(5)
+    nodes = []
+    for _ in range(8):
+        node = Node(NodeResources())
+        for g in rng.choice(names, size=rng.integers(1, 4), replace=False):
+            node.state(g).n_sat = int(rng.integers(1, 4))
+            node.state(g).n_cached = int(rng.integers(0, 2))
+        nodes.append(node)
+    # 1) legacy reference loop
+    ref = []
+    for node in nodes:
+        update_capacity_table(pred, store, qos, specs, node, m_max=8)
+        ref.append({fn: e.capacity for fn, e in node.table.items()})
+        node.table.clear()
+    # 2) delegation through update_capacity_table(engine=service)
+    svc = _service(world, m_max=8)
+    for node, expect in zip(nodes, ref):
+        update_capacity_table(pred, store, qos, specs, node, m_max=8,
+                              engine=svc)
+        assert {fn: e.capacity for fn, e in node.table.items()} == expect
+        node.table.clear()
+    # 3) the service API proper (fresh cache so it re-solves)
+    svc2 = _service(world, m_max=8)
+    svc2.update_nodes(nodes, m_max=8)
+    for node, expect in zip(nodes, ref):
+        assert {fn: e.capacity for fn, e in node.table.items()} == expect
+
+
+# ---------------------------------------------------------------------------
+# Epoch invalidation under retraining
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_invalidation_canary_forest_swap(world):
+    """Cache entries from epoch N must never serve a post-retrain epoch
+    N+1 lookup.  A canary forest (trained on shifted labels, so its
+    capacities differ) is swapped in via a retrain; the old capacity must
+    be unobservable afterwards and the stale-epoch counter stay 0."""
+    specs, gt, store, qos, _ = world
+    pred = PerfPredictor(n_trees=8, max_depth=6, seed=3)
+    X, y = generate_dataset(specs, gt, store, qos, 400, seed=9)
+    pred.add_dataset(X, y)
+    svc = PredictionService(pred, store, qos, specs, EngineConfig(m_max=10))
+    names = sorted(specs)
+    coloc = {names[1]: (2.0, 0.0)}
+    cap_before, _rows = svc.capacity(dict(coloc), names[0])
+    epoch_before = svc.epoch
+    assert svc.capacity_hint(dict(coloc), names[0]) == cap_before
+    # canary swap: retrain on labels scaled 4x -> capacities collapse
+    retrained = svc.on_samples(list(X), list(4.0 * y), retrain=True)
+    assert retrained
+    assert svc.epoch == epoch_before + 1
+    assert svc.stats.retrains == 1 and svc.stats.retrain_time_s > 0
+    # epoch N entries are gone: no hint, and a fresh solve sees the
+    # canary forest (strictly smaller capacity than the old epoch's)
+    assert svc.capacity_hint(dict(coloc), names[0]) is None
+    cap_after, rows_after = svc.capacity(dict(coloc), names[0])
+    assert rows_after > 0                      # re-solved, not cached
+    cap_ref, _ = capacity_of(pred, store, qos, specs, dict(coloc),
+                             names[0], 10)
+    assert cap_after == cap_ref                # canary forest's answer
+    assert cap_after < cap_before              # the canary is observable
+    assert svc.stats.stale_epoch_hits == 0     # eager invalidation held
+
+
+def test_stale_epoch_counter_catches_foreign_entries(world):
+    """Defense in depth: an entry whose epoch tag mismatches the current
+    forest is counted and dropped, never served."""
+    svc = _service(world, m_max=8)
+    names = sorted(svc.specs)
+    coloc = {names[1]: (1.0, 0.0)}
+    cap, _ = svc.capacity(dict(coloc), names[0])
+    key = svc.signature(coloc, names[0])
+    epoch, _cap = svc._cache[key]
+    svc._cache[key] = (epoch - 1, 99)          # forge a stale-epoch entry
+    assert svc.capacity_hint(dict(coloc), names[0]) is None
+    assert svc.stats.stale_epoch_hits == 1
+    assert key not in svc._cache               # dropped, not retried
+
+
+def test_on_samples_retrain_policy(world):
+    specs, gt, store, qos, _ = world
+    pred = PerfPredictor(n_trees=6, max_depth=6, seed=4)
+    X, y = generate_dataset(specs, gt, store, qos, 300, seed=11)
+    pred.add_dataset(X, y)
+    svc = PredictionService(pred, store, qos, specs,
+                            EngineConfig(m_max=6, retrain_every=10))
+    assert not svc.on_samples(list(X[:4]), list(y[:4]))   # below threshold
+    assert svc.stats.retrains == 0
+    assert svc.on_samples(list(X[4:10]), list(y[4:10]))   # crosses it
+    assert svc.stats.retrains == 1
+    assert not svc.on_samples(list(X[10:14]), list(y[10:14]))  # reset
+    assert not svc.on_samples(list(X[14:18]), list(y[14:18]),
+                              retrain=False)              # forced off
+    assert svc.on_samples([], [], retrain=True)           # forced on
+    assert svc.stats.retrains == 2
+
+
+def test_online_retraining_during_simulation_run():
+    """The epoch machinery exercised end to end: a small heterogeneous
+    scenario run with online retraining armed must actually retrain,
+    refresh tables (billed separately), and finish with zero stale-epoch
+    cache hits."""
+    scenario = make_scenario("burst-storm", n_functions=5, duration_s=80,
+                             target_nodes=10, seed=2)
+    world = scenario_world(scenario, n_train=500, n_trees=8)
+    sim = scenario_simulation(scenario, "jiagu", world=world,
+                              collect_samples=True, online_retrain=True,
+                              retrain_every=6, sample_every_s=5)
+    res = sim.run()
+    assert res.retrains >= 1
+    assert res.retrain_time_s > 0.0
+    assert res.refresh_rows > 0 and res.refresh_time_s > 0.0
+    assert res.stale_epoch_hits == 0
+    assert np.isfinite(np.asarray(res.density_series)).all()
+
+
+# ---------------------------------------------------------------------------
+# Node-shape-aware capacities (schema v2)
+# ---------------------------------------------------------------------------
+
+
+def test_v2_dataset_emits_per_shape_rows(world):
+    specs, gt, store, qos, _ = world
+    X, y = generate_dataset(specs, gt, store, qos, 300, seed=7, schema=2,
+                            node_shapes=[NodeResources(), BIG])
+    assert X.shape[1] == SCHEMA_V2.n_features
+    shapes = set(map(tuple, np.round(X[:, N_FEATURES:], 3)))
+    assert (1.0, 1.0) in shapes and (2.0, 2.0) in shapes
+
+
+def test_v2_service_capacity_grows_with_node_size(world):
+    """The point of the schema: the same colocation on a 2x node gets a
+    capacity at least the standard node's, and strictly more for loads
+    where the standard node is the binding constraint."""
+    specs, gt, store, qos, _ = world
+    pred = PerfPredictor(n_trees=10, max_depth=7, seed=0)
+    X, y = generate_dataset(specs, gt, store, qos, 700, seed=1, schema=2,
+                            node_shapes=[NodeResources(), BIG])
+    pred.add_dataset(X, y)
+    svc = PredictionService(pred, store, qos, specs, EngineConfig(m_max=40),
+                            schema=2)
+    names = sorted(specs)
+    total_std = total_big = 0
+    for fn in names[:4]:
+        coloc = {names[4]: (2.0, 0.0)}
+        cap_std, _ = svc.capacity(dict(coloc), fn, 40)
+        cap_big, _ = svc.capacity(dict(coloc), fn, 40, node_res=BIG)
+        total_std += cap_std
+        total_big += cap_big
+        assert cap_big >= cap_std
+    assert total_big > total_std

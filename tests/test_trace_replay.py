@@ -1,0 +1,70 @@
+"""CSV trace replay: real Azure/Huawei-style ``fn,timestamp,rps`` dumps
+behind the same ``Trace`` interface as the generated programs."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Trace, replay_trace
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "sample_trace.csv")
+
+
+def test_replay_fixture_parses_and_buckets():
+    trace = replay_trace(FIXTURE)
+    assert isinstance(trace, Trace)
+    assert trace.name == "sample_trace"
+    assert sorted(trace.rps) == ["alpha", "beta"]
+    # timestamps normalize to the earliest entry (t=100.0 -> second 0)
+    # and the trace spans floor(103.9 - 100) + 1 = 4 seconds
+    assert trace.duration_s == 4
+    # same-second entries accumulate: alpha has 102.2->7, 102.9->3
+    assert np.allclose(trace.rps["alpha"], [5.0, 10.0, 10.0, 0.0])
+    assert np.allclose(trace.rps["beta"], [2.0, 0.0, 1.5, 4.0])
+
+
+def test_replay_trace_interface_matches_generated_traces():
+    trace = replay_trace(FIXTURE)
+    # Trace.at clamp semantics (same contract as generated traces)
+    assert trace.at("alpha", 0) == 5.0
+    assert trace.at("alpha", -5) == 5.0            # clamps to the start
+    assert trace.at("alpha", 999) == trace.rps["alpha"][-1]
+    with pytest.raises(KeyError, match="ghost"):
+        trace.at("ghost", 0)
+
+
+def test_replay_is_deterministic_and_extendable():
+    a = replay_trace(FIXTURE)
+    b = replay_trace(FIXTURE, name="renamed", duration_s=10)
+    for fn in a.rps:
+        assert np.array_equal(a.rps[fn], b.rps[fn][:a.duration_s])
+        assert np.all(b.rps[fn][a.duration_s:] == 0.0)
+    assert b.name == "renamed"
+    assert b.duration_s == 10
+
+
+def test_replay_rejects_garbage(tmp_path):
+    empty = tmp_path / "empty.csv"
+    empty.write_text("fn,timestamp,rps\n")
+    with pytest.raises(ValueError, match="no trace entries"):
+        replay_trace(str(empty))
+    bad = tmp_path / "bad.csv"
+    bad.write_text("alpha,0.0,5\nalpha,oops,3\n")
+    with pytest.raises(ValueError, match="non-numeric"):
+        replay_trace(str(bad))
+    neg = tmp_path / "neg.csv"
+    neg.write_text("alpha,0.0,-5\n")
+    with pytest.raises(ValueError, match="negative"):
+        replay_trace(str(neg))
+    short = tmp_path / "short.csv"
+    short.write_text("alpha,0.0\n")
+    with pytest.raises(ValueError, match="expected"):
+        replay_trace(str(short))
+    nan = tmp_path / "nan.csv"
+    nan.write_text("alpha,nan,5\n")
+    with pytest.raises(ValueError, match="non-finite"):
+        replay_trace(str(nan))
+    nan.write_text("alpha,0.0,nan\n")
+    with pytest.raises(ValueError, match="non-finite"):
+        replay_trace(str(nan))
