@@ -15,6 +15,12 @@ tail) over heterogeneous fleets sized 64 -> 512 nodes and reports, per
     per schedule, fast-path fraction,
   * engine telemetry: predictor calls, signature-cache hit rate.
 
+Every run is driven through the ``repro.platform`` control plane: the
+sweep derives one ``PlatformConfig`` manifest (a plain dict,
+``PlatformConfig.from_dict``-validated) per (scenario, size, system)
+from ``study_spec``'s base manifest — no bespoke argument plumbing —
+and ``Platform.build`` assembles the world/scheduler/autoscaler stack.
+
 ``ab_parity`` is the gate that let ``SimConfig.use_capacity_engine``
 default to True: the same scenario is simulated twice — legacy per-node
 capacity solving vs the CapacityEngine — and end-to-end metrics
@@ -25,18 +31,43 @@ capacity solving vs the CapacityEngine — and end-to-end metrics
 from __future__ import annotations
 
 import argparse
+import copy
 import time
 
 import numpy as np
 
 from .common import emit, save_artifact
 
-from repro.core import (make_scenario, scenario_functions,
-                        scenario_simulation, scenario_world)
+from repro.core import scenario_world
+from repro.platform import Platform, PlatformConfig, scenario_from_config
 
 N_FUNCTIONS = 24
 STUDY_KINDS = ("burst-storm", "diurnal-shift", "coldstart-churn",
                "azure-sparse")
+
+
+def study_spec(quick: bool = False, seed: int = 0) -> dict:
+    """The whole study as data: sweep axes + the base ``PlatformConfig``
+    manifest every run derives from (``benchmarks.run`` passes this
+    through, and per-run manifests go through
+    ``PlatformConfig.from_dict`` for strict validation)."""
+    return {
+        "sizes": [64, 128] if quick else [64, 128, 256, 512],
+        "kinds": list(STUDY_KINDS[:2] if quick else STUDY_KINDS),
+        "seed": seed,
+        # NB: n_train is held at full strength even in quick mode — an
+        # under-trained predictor moves the study into the
+        # overcommit-miss regime (QoS above the paper's bar).  Only the
+        # forest is slightly smaller (20 vs 24 trees); the world is
+        # built once, so the cost is a few seconds either way.
+        "base": {
+            "scenario": {"n_functions": N_FUNCTIONS,
+                         "duration_s": 180 if quick else 600,
+                         "seed": seed, "spec_seed": seed + 5},
+            "prediction": {"n_train": 2000,
+                           "n_trees": 20 if quick else 24},
+        },
+    }
 
 
 def _series_nan_free(res) -> bool:
@@ -63,34 +94,46 @@ def _result_row(kind: str, target_nodes: int, system: str, res,
     }
 
 
-def run_study(sizes, kinds, duration: int, seed: int = 0,
-              n_train: int = 2000, n_trees: int = 24):
-    """The density/QoS/cost sweep.  One function population and one
-    trained predictor are shared by every scenario (they differ only in
-    trace program and cluster size)."""
-    specs = scenario_functions(N_FUNCTIONS, seed=seed + 5)
+def _run_manifest(manifest: dict):
+    """One run from one manifest dict, through the Platform path (world
+    built from scratch — the A/B arms depend on that)."""
+    plat = Platform.build(config=PlatformConfig.from_dict(manifest))
+    return plat, plat.run()
+
+
+def run_study(spec: dict):
+    """The density/QoS/cost sweep, one manifest per run.  One function
+    population and one trained predictor are shared by every scenario
+    (they differ only in trace program and cluster size)."""
     world = None
     rows = []
-    for kind in kinds:
-        for target in sizes:
-            scenario = make_scenario(
-                kind, specs=specs, duration_s=duration, target_nodes=target,
-                seed=seed, heterogeneous=True)
-            if world is None:
-                world = scenario_world(scenario, n_train=n_train,
-                                       n_trees=n_trees)
+    for kind in spec["kinds"]:
+        for target in spec["sizes"]:
+            scenario = None
             base = None
             for system in ("k8s", "jiagu"):
+                manifest = copy.deepcopy(spec["base"])
+                manifest["scenario"].update(kind=kind,
+                                            target_nodes=target)
+                manifest.setdefault("scheduler", {})["name"] = system
+                cfg = PlatformConfig.from_dict(manifest)
+                if scenario is None:
+                    scenario = scenario_from_config(cfg)
+                if world is None:
+                    world = scenario_world(
+                        scenario, n_train=cfg.prediction.n_train,
+                        n_trees=cfg.prediction.n_trees)
                 t0 = time.perf_counter()
-                sim = scenario_simulation(scenario, system, world=world)
-                res = sim.run()
+                plat = Platform.build(scenario=scenario, config=cfg,
+                                      world=world)
+                res = plat.run()
                 row = _result_row(kind, target, system, res,
                                   time.perf_counter() - t0)
                 if system == "k8s":
                     base = res.density
                 row["norm_density"] = round(res.density / max(base, 1e-9), 3)
-                if system == "jiagu" and sim.scheduler.engine is not None:
-                    st = sim.scheduler.engine.stats
+                if system == "jiagu" and plat.service is not None:
+                    st = plat.service.stats
                     row["engine_predict_calls"] = st.predict_calls
                     row["engine_cache_hits"] = st.cache_hits
                     row["engine_unique_solves"] = st.unique_solves
@@ -114,17 +157,22 @@ def run_study(sizes, kinds, duration: int, seed: int = 0,
 def _arm(use_engine: bool, kind: str, duration: int, target_nodes: int,
          n_functions: int, seed: int, migrate: bool):
     """One A/B arm, built from scratch so both arms start bit-identical
-    (same seeds -> same specs, ground truth, profiles, forest)."""
-    scenario = make_scenario(kind, n_functions=n_functions,
-                             duration_s=duration, target_nodes=target_nodes,
-                             seed=seed, heterogeneous=True)
-    world = scenario_world(scenario, n_train=1000, n_trees=16)
-    sim = scenario_simulation(scenario, "jiagu", world=world,
-                              use_engine=use_engine, migrate=migrate)
-    res = sim.run()
+    (same seeds -> same specs, ground truth, profiles, forest).  The
+    only difference between the arms is the manifest's
+    ``simulation.use_capacity_engine`` flag."""
+    manifest = {
+        "scenario": {"kind": kind, "n_functions": n_functions,
+                     "duration_s": duration,
+                     "target_nodes": target_nodes, "seed": seed},
+        "scheduler": {"name": "jiagu"},
+        "scaling": {"migrate": migrate},
+        "prediction": {"n_train": 1000, "n_trees": 16},
+        "simulation": {"use_capacity_engine": use_engine},
+    }
+    plat, res = _run_manifest(manifest)
     tables = sorted(
         tuple(sorted((fn, e.capacity) for fn, e in node.table.items()))
-        for node in sim.cluster.nodes.values())
+        for node in plat.cluster.nodes.values())
     return res, tables
 
 
@@ -202,22 +250,29 @@ def retrain_online(quick: bool = False, seed: int = 0,
     n_functions = 12 if quick else 24
     n_train = 1600 if quick else 2600
     n_trees = 16 if quick else 24
-    scenario = make_scenario("burst-storm", n_functions=n_functions,
-                             duration_s=duration,
-                             target_nodes=target_nodes, seed=seed,
-                             heterogeneous=True)
+    base = {
+        "scenario": {"kind": "burst-storm", "n_functions": n_functions,
+                     "duration_s": duration,
+                     "target_nodes": target_nodes, "seed": seed},
+        "scheduler": {"name": "jiagu"},
+        "prediction": {"n_train": n_train, "n_trees": n_trees,
+                       "max_depth": 10, "online_retrain": True,
+                       "retrain_every": 48},
+        "simulation": {"collect_samples": True, "sample_every_s": 5},
+    }
+    scenario = scenario_from_config(PlatformConfig.from_dict(base))
     rows = []
     for version in (1, 2):
+        manifest = copy.deepcopy(base)
+        manifest["prediction"]["schema_version"] = version
+        cfg = PlatformConfig.from_dict(manifest)
         world = scenario_world(scenario, n_train=n_train, n_trees=n_trees,
                                max_depth=10, schema_version=version)
         t0 = time.perf_counter()
-        sim = scenario_simulation(scenario, "jiagu", world=world,
-                                  collect_samples=True,
-                                  online_retrain=True, retrain_every=48,
-                                  sample_every_s=5)
-        res = sim.run()
+        plat = Platform.build(scenario=scenario, config=cfg, world=world)
+        res = plat.run()
         wall = time.perf_counter() - t0
-        svc = sim.scheduler.engine
+        svc = plat.service
         s = res.sched
         row = {
             "schema": f"v{version}", "target_nodes": target_nodes,
@@ -275,19 +330,14 @@ def retrain_online(quick: bool = False, seed: int = 0,
     return record
 
 
-def run(quick: bool = False, seed: int = 0):
-    sizes = [64, 128] if quick else [64, 128, 256, 512]
-    kinds = STUDY_KINDS[:2] if quick else STUDY_KINDS
-    duration = 180 if quick else 600
-    # NB: n_train is held at full strength even in quick mode — an
-    # under-trained predictor moves the study into the overcommit-miss
-    # regime (QoS above the paper's bar).  Only the forest is slightly
-    # smaller (20 vs 24 trees); the world is built once, so the cost is
-    # a few seconds either way.
-    rows = run_study(sizes, kinds, duration, seed=seed,
-                     n_train=2000, n_trees=20 if quick else 24)
+def run(quick: bool = False, seed: int = 0, spec: dict = None):
+    """``spec`` defaults to ``study_spec(quick, seed)`` —
+    ``benchmarks.run`` passes its own so the whole study is driven by
+    one manifest tree."""
+    spec = spec or study_spec(quick=quick, seed=seed)
+    rows = run_study(spec)
     print("\n# A/B full-trace parity (legacy vs CapacityEngine)")
-    parity = ab_parity(duration=120 if quick else 300, seed=seed)
+    parity = ab_parity(duration=120 if quick else 300, seed=spec["seed"])
     print(f"# parity: tables_equal={parity['tables_equal']} "
           f"density={parity['engine']['density']:.3f} "
           f"qos={parity['engine']['qos_violation']:.4f} => PASS")
@@ -298,8 +348,10 @@ def run(quick: bool = False, seed: int = 0):
               f"QoS bar: "
               + ", ".join(f"{r['scenario']}@{r['target_nodes']}"
                           for r in bad_qos))
-    record = {"sizes": sizes, "kinds": list(kinds), "duration_s": duration,
-              "n_functions": N_FUNCTIONS, "rows": rows, "ab_parity": parity}
+    record = {"sizes": spec["sizes"], "kinds": list(spec["kinds"]),
+              "base_manifest": spec["base"],
+              "n_functions": N_FUNCTIONS, "rows": rows,
+              "ab_parity": parity}
     save_artifact("large_cluster", record)
     return record
 

@@ -39,7 +39,12 @@ def main() -> None:
             duration=300 if args.quick else 600, quick=args.quick)),
         ("prediction", lambda: prediction.run(quick=args.quick)),
         ("capacity_engine", lambda: capacity_engine.run(quick=args.quick)),
-        ("large_cluster", lambda: large_cluster.run(quick=args.quick)),
+        # the large-cluster study is driven through repro.platform
+        # manifests: one PlatformConfig.from_dict-validated dict per
+        # (scenario, size, system) run, derived from this spec
+        ("large_cluster", lambda: large_cluster.run(
+            quick=args.quick,
+            spec=large_cluster.study_spec(quick=args.quick))),
         ("model_perf", lambda: model_perf.run(quick=args.quick)),
         ("roofline_report", lambda: roofline_report.run()),
     ]

@@ -17,7 +17,7 @@ import numpy as np
 from .common import (CFORK_MS, DOCKER_MS, build_world, emit, make_sim,
                      save_artifact)
 
-from repro.core import SimConfig, flip_trace, realworld_suite, timer_trace
+from repro.core import SimConfig, get_trace, realworld_suite
 
 # Table 2 container-start systems (paper-reported init latencies, ms)
 TABLE2_SYSTEMS = {
@@ -44,14 +44,14 @@ def run(duration: int = 600, quick: bool = False):
     fns = sorted(world.specs)
     rows = []
 
-    # -- Fig 11: extreme traces --------------------------------------------
+    # -- Fig 11: extreme traces (from the platform trace registry) ---------
     # timer: scale events every period (period > keepalive so evictions
     # actually happen), load quantized to the function's saturated RPS
     traces = {
-        "timer(best)": timer_trace(
+        "timer(best)": get_trace("timer")(
             fns[0], duration_s=duration, period_s=90,
             rps_per_inst=world.specs[fns[0]].saturated_rps),
-        "flip(worst)": flip_trace(fns[:3], duration_s=duration),
+        "flip(worst)": get_trace("flip")(fns[:3], duration_s=duration),
     }
     # -- Fig 12: real-world traces -----------------------------------------
     for tr in realworld_suite(fns, duration_s=duration,

@@ -3,13 +3,16 @@ model replicas (smoke-scale gemma2 + mamba2), driven by a fluctuating
 request trace.  Dual-staged scaling releases/revives replicas as load
 moves; every completion is a real greedy decode.
 
-``--scenario`` swaps the default sinusoidal offered load for one of the
-large-cluster scenario trace programs (correlated burst storms,
-migrating diurnal peaks, heavy-tailed cold-start churn, the Azure-like
-sparse tail), normalized to smoke-scale request rates.
+``--scenario`` swaps the default sinusoidal offered load for any
+registered scenario trace program (``repro.platform`` scenario
+registry: correlated burst storms, migrating diurnal peaks,
+heavy-tailed cold-start churn, the Azure-like sparse tail, or a
+``replay`` of a real CSV dump via ``--trace-csv``), normalized to
+smoke-scale request rates.
 
   PYTHONPATH=src python examples/serve_cluster.py [--seconds 60]
       [--scenario burst-storm]
+      [--scenario replay --trace-csv tests/data/sample_trace.csv]
 """
 import argparse
 import os
@@ -22,31 +25,24 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_smoke_config
-from repro.core.traces import (azure_sparse_trace, burst_storm_trace,
-                               coldstart_churn_trace, diurnal_shift_trace)
 from repro.models import model as model_lib
+from repro.platform import get_scenario_builder, registered_scenarios
 from repro.serving.engine import Request, ServingEngine
-
-SCENARIO_TRACES = {
-    "burst-storm": burst_storm_trace,
-    "diurnal-shift": diurnal_shift_trace,
-    "coldstart-churn": coldstart_churn_trace,
-    "azure-sparse": azure_sparse_trace,
-}
 
 
 def offered_load(scenario: str, archs, seconds: int, seed: int = 0,
-                 peak: float = 3.5):
-    """Per-arch Poisson-rate series from a scenario trace program.
+                 peak: float = 3.5, **trace_kw):
+    """Per-arch Poisson-rate series from a registered scenario trace
+    program.
 
     One global normalization (the hottest arch's hottest second offers
     ``peak`` requests) so the cross-arch load skew the scenario
     generators produce is preserved; None for the default sinusoid."""
     if scenario == "sinusoid":
         return None
-    gen = SCENARIO_TRACES[scenario]
+    gen = get_scenario_builder(scenario)
     tr = gen(list(archs), duration_s=seconds, seed=seed,
-             scale_rps={a: 1.0 for a in archs})
+             scale_rps={a: 1.0 for a in archs}, **trace_kw)
     hi = max(float(tr.rps[a].max()) for a in archs)
     factor = peak / hi if hi > 0 else 1.0
     return {a: tr.rps[a] * factor for a in archs}
@@ -58,10 +54,18 @@ def main():
     ap.add_argument("--release-after", type=int, default=6,
                     help="ticks of low load before releasing a replica")
     ap.add_argument("--scenario", default="sinusoid",
-                    choices=["sinusoid"] + sorted(SCENARIO_TRACES),
+                    choices=["sinusoid"] + registered_scenarios(),
                     help="offered-load program (default: sinusoid)")
+    ap.add_argument("--trace-csv", default=None,
+                    help="CSV dump for --scenario replay "
+                         "(fn,timestamp,rps rows)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    trace_kw = {}
+    if args.scenario == "replay":
+        if not args.trace_csv:
+            ap.error("--scenario replay requires --trace-csv")
+        trace_kw["path"] = args.trace_csv
 
     engines = {}
     for arch in ["gemma2-2b", "mamba2-2.7b"]:
@@ -76,7 +80,7 @@ def main():
     low_ticks = {a: 0 for a in engines}
     stats = {a: dict(logical=0, released=0, done=0) for a in engines}
     load = offered_load(args.scenario, list(engines), args.seconds,
-                        seed=args.seed)
+                        seed=args.seed, **trace_kw)
 
     for t in range(args.seconds):
         for arch, (cfg, eng) in engines.items():

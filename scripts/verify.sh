@@ -1,20 +1,25 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the exact command the roadmap pins.
-#   scripts/verify.sh            full suite
+#   scripts/verify.sh            full suite + platform smoke
 #   scripts/verify.sh tests/...  any extra pytest args pass through
 #   scripts/verify.sh --full     tier-1 + slow-marked tests + the quick
 #                                large-cluster scenario benchmark (the
 #                                engine-default A/B gate end to end) +
 #                                the 256-node online-retraining / schema
 #                                v1-vs-v2 gate
+# The platform smoke step builds every registered scheduler against one
+# scenario from pure PlatformConfig manifest dicts and runs 30 ticks
+# (python -m repro.platform).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "${1:-}" = "--full" ]; then
     shift
     RUN_SLOW=1 python -m pytest -x -q "$@"
+    python -m repro.platform
     python -m benchmarks.large_cluster --quick
     python -m benchmarks.large_cluster --retrain-online --quick
     exit 0
 fi
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+python -m repro.platform

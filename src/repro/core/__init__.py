@@ -1,9 +1,11 @@
 """Jiagu's core: pre-decision scheduling + dual-staged scaling (the
 paper's contribution), the RFR predictor, the cluster simulator, and the
 K8s/Gsight/Owl baselines."""
-from .autoscaler import Autoscaler, ScalingConfig, ScalingMetrics
+from .autoscaler import (Autoscaler, ScalingConfig, ScalingMetrics,
+                         SchedulerCapacityProvider)
 from .capacity import QOS_MULT, QoSStore, capacity_of, update_capacity_table
 from .cluster import CapEntry, Cluster, FuncState, Node
+from .events import EventHub, Observer
 from .interference import GroundTruth, NodeResources
 from .metrics import Reservoir
 from .prediction_service import (SCHEMA_V1, SCHEMA_V2, CapacityEngine,
@@ -16,21 +18,32 @@ from .profiles import (BENCH_FUNCTIONS, FunctionSpec, ProfileStore,
                        arch_functions, synthetic_functions)
 from .scheduler import (FAST_PATH_MS, REROUTE_MS, BaseScheduler,
                         GsightScheduler, JiaguScheduler, K8sScheduler,
-                        OwlScheduler)
+                        OwlScheduler, SchedulerBuildContext,
+                        SchedulerEntry, build_scheduler,
+                        register_scheduler, registered_schedulers,
+                        scheduler_entry)
 from .scenarios import (LARGE_NODE, SCENARIO_KINDS, STANDARD_NODE,
                         NodeClass, Scenario, ScenarioWorld,
-                        build_simulation, make_scenario,
-                        scale_trace_to_nodes, scenario_functions,
-                        scenario_simulation, scenario_suite,
-                        scenario_world, zipf_weights)
-from .simulator import SimConfig, SimResult, Simulation, generate_dataset
+                        build_simulation, get_scenario_builder,
+                        make_scenario, register_scenario,
+                        registered_scenarios, scale_trace_to_nodes,
+                        scenario_functions, scenario_simulation,
+                        scenario_suite, scenario_world, zipf_weights)
+from .simulator import (EqualSplitRouter, SimConfig, SimResult,
+                        Simulation, generate_dataset)
 from .traces import (Trace, azure_sparse_trace, burst_storm_trace,
                      coldstart_churn_trace, diurnal_shift_trace, flip_trace,
-                     realworld_suite, realworld_trace, replay_trace,
+                     get_trace, realworld_suite, realworld_trace,
+                     register_trace, registered_traces, replay_trace,
                      timer_trace)
 
 __all__ = [
     "Autoscaler", "ScalingConfig", "ScalingMetrics", "QOS_MULT", "QoSStore",
+    "SchedulerCapacityProvider", "EventHub", "Observer", "EqualSplitRouter",
+    "SchedulerBuildContext", "SchedulerEntry", "build_scheduler",
+    "register_scheduler", "registered_schedulers", "scheduler_entry",
+    "get_scenario_builder", "register_scenario", "registered_scenarios",
+    "get_trace", "register_trace", "registered_traces",
     "CapacityEngine", "EngineConfig", "EngineStats", "coloc_signature",
     "PredictionService", "FeatureSchema", "SCHEMA_V1", "SCHEMA_V2",
     "get_schema", "Reservoir", "replay_trace",

@@ -7,6 +7,14 @@ Dual-staged timeline for a load drop (paper Fig. 10, defaults §6):
     t=keepalive_s "real eviction": still-cached instances are destroyed
 A load rise first consumes cached instances via *logical cold starts*
 (re-route, <1 ms) and only then asks the scheduler for real cold starts.
+
+The autoscaler consumes its scheduler only through the ``repro.platform``
+capability protocols — ``ReleasePicker`` / ``LogicalStartPicker`` for
+the dual-staged picks and ``CapacityProvider`` for migration targeting —
+never through concrete class identity, so any scheduler that opts into
+dual-staged scaling (the ``BaseScheduler`` greedy defaults, or its own
+overrides) gets the full release / logical-cold-start / migration
+machinery.
 """
 from __future__ import annotations
 
@@ -16,8 +24,9 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
 from .cluster import Cluster, Node
+from .events import EventHub
 from .metrics import Reservoir
-from .scheduler import REROUTE_MS, BaseScheduler, JiaguScheduler
+from .scheduler import REROUTE_MS, BaseScheduler
 
 DEFAULT_KEEPALIVE_S = 60.0
 
@@ -114,12 +123,46 @@ class _CachedLedger:
         dq.extend(splits)
 
 
+class SchedulerCapacityProvider:
+    """Default ``platform.CapacityProvider``: best known capacity of fn
+    on node is the capacity-table entry, else a zero-cost
+    ``PredictionService`` cache hit (nodes that share a colocation
+    signature — and, under schema v2, a node shape — with an
+    already-solved node get an answer without any inference), else
+    None.  Table-free schedulers simply report None everywhere."""
+
+    def __init__(self, scheduler: BaseScheduler):
+        self.scheduler = scheduler
+
+    def node_capacity(self, node: Node, fn: str) -> Optional[int]:
+        entry = node.table.get(fn)
+        if entry is not None:
+            return entry.capacity
+        service = self.scheduler.prediction_service
+        if service is None:
+            return None
+        return service.capacity_hint(service.node_coloc(node), fn,
+                                     node_res=node.res)
+
+
 class Autoscaler:
+    """``release_picker`` / ``logical_start_picker`` / ``capacity``
+    plug the scaling policies (defaults: the scheduler itself, which
+    implements the picker protocols, and a table/cache-hint capacity
+    provider); ``events`` receives ``on_schedule`` / ``on_scale``
+    observer callbacks."""
+
     def __init__(self, cluster: Cluster, scheduler: BaseScheduler,
-                 cfg: ScalingConfig):
+                 cfg: ScalingConfig, *,
+                 release_picker=None, logical_start_picker=None,
+                 capacity=None, events: Optional[EventHub] = None):
         self.cluster = cluster
         self.scheduler = scheduler
         self.cfg = cfg
+        self.release_picker = release_picker or scheduler
+        self.logical_start_picker = logical_start_picker or scheduler
+        self.capacity = capacity or SchedulerCapacityProvider(scheduler)
+        self.events = events or EventHub()
         self.metrics = ScalingMetrics()
         self._below_since: Dict[str, Optional[float]] = {}
         self._ledger = _CachedLedger()
@@ -143,8 +186,8 @@ class Autoscaler:
 
     def _scale_up(self, now: float, fn: str, need: int):
         if self.cfg.dual_staged:
-            picks = self.scheduler.pick_logical_start_nodes(fn, need) \
-                if isinstance(self.scheduler, JiaguScheduler) else []
+            picks = self.logical_start_picker.pick_logical_start_nodes(
+                fn, need)
             for node, k in picks:
                 got = node.logical_start(fn, k)
                 self._ledger.pop_newest(fn, node.id, got)
@@ -152,6 +195,8 @@ class Autoscaler:
                 self.metrics.cold_start_ms.extend([REROUTE_MS] * got)
                 need -= got
                 self.scheduler.notify_change(node, now)
+                if got:
+                    self.events.on_scale(now, fn, "logical_start", got)
             if need > 0 and self.cluster.cached_count(fn) > 0:
                 # cached instances exist but their nodes are full: these
                 # conversions would have been real cold starts; migration
@@ -165,6 +210,9 @@ class Autoscaler:
             for p in placements:
                 self.metrics.cold_start_ms.extend(
                     [p.latency_ms + self.cfg.init_ms] * p.count)
+            self.events.on_schedule(now, fn, placements)
+            if placed:
+                self.events.on_scale(now, fn, "real_cold_start", placed)
 
     def _scale_down_dual(self, now: float, fn: str, expected: int,
                          n_sat: int):
@@ -175,26 +223,14 @@ class Autoscaler:
         if now - since < self.cfg.release_s:
             return
         excess = n_sat - expected
-        for node, k in self.scheduler.pick_release_nodes(fn, excess) \
-                if isinstance(self.scheduler, JiaguScheduler) else \
-                self._default_release_picks(fn, excess):
+        for node, k in self.release_picker.pick_release_nodes(fn, excess):
             got = node.release(fn, k)
             self._ledger.push(fn, now, node.id, got)
             self.metrics.releases += got
             self.scheduler.notify_change(node, now)
+            if got:
+                self.events.on_scale(now, fn, "release", got)
         self._below_since[fn] = now  # re-arm for further drops
-
-    def _default_release_picks(self, fn: str, k: int):
-        picks = []
-        for node in sorted(self.cluster.nodes_with(fn),
-                           key=lambda n: n.n_instances()):
-            if k <= 0:
-                break
-            take = min(k, node.funcs[fn].n_sat)
-            if take > 0:
-                picks.append((node, take))
-                k -= take
-        return picks
 
     def _scale_down_traditional(self, now: float, fn: str, expected: int,
                                 n_sat: int):
@@ -205,10 +241,12 @@ class Autoscaler:
         if now - since < self.cfg.keepalive_s:
             return
         excess = n_sat - expected
-        for node, k in self._default_release_picks(fn, excess):
+        for node, k in self.release_picker.pick_release_nodes(fn, excess):
             got = node.evict_sat(fn, k)
             self.metrics.evictions += got
             self.scheduler.notify_change(node, now)
+            if got:
+                self.events.on_scale(now, fn, "evict", got)
         self._below_since[fn] = now
 
     def _tick_fn(self, now: float, fn: str, rps: float):
@@ -237,23 +275,15 @@ class Autoscaler:
                 self.metrics.evictions += got
                 if got:
                     self.scheduler.notify_change(node, now)
+                    self.events.on_scale(now, fn, "evict", got)
 
     # -- on-demand migration (paper §5) ---------------------------------
 
     def _node_capacity(self, node: Node, fn: str) -> Optional[int]:
-        """Best known capacity of fn on node: the capacity-table entry,
-        else a zero-cost PredictionService cache hit (nodes that share a
-        colocation signature — and, under schema v2, a node shape — with
-        an already-solved node get an answer without any inference),
-        else None."""
-        entry = node.table.get(fn)
-        if entry is not None:
-            return entry.capacity
-        service = getattr(self.scheduler, "engine", None)
-        if service is None:
-            return None
-        return service.capacity_hint(service.node_coloc(node), fn,
-                                     node_res=node.res)
+        """Best known capacity of fn on node, via the pluggable
+        ``CapacityProvider`` (default: capacity table, then zero-cost
+        service cache hints)."""
+        return self.capacity.node_capacity(node, fn)
 
     def _migrate(self, now: float):
         """Move cached instances off nodes where they could no longer be
@@ -288,6 +318,7 @@ class Autoscaler:
                 self.metrics.migrations += k
                 self.scheduler.notify_change(node, now)
                 self.scheduler.notify_change(target, now)
+                self.events.on_scale(now, fn, "migrate", k)
 
     def _find_migration_target(self, fn: str, src: Node, k: int
                                ) -> Optional[Node]:

@@ -1,0 +1,86 @@
+"""Observer hooks for the control plane (the ``repro.platform`` API).
+
+Benchmarks and tests used to collect metrics by reaching into simulator
+internals (``sim.scheduler.metrics``, ``sim.autoscaler.metrics``, the
+service's stats object).  The observer API turns the interesting control
+-plane transitions into events any number of observers can subscribe to
+without the run loop knowing who is listening:
+
+  * ``on_tick(now, sim)``        — once per simulated second, after
+    autoscaling/routing/measurement for that second completed,
+  * ``on_schedule(now, fn, placements)`` — a scheduler decision placed
+    real (cold-started) instances,
+  * ``on_scale(now, fn, event, count)``  — an autoscaler state
+    transition: ``"logical_start"``, ``"real_cold_start"``,
+    ``"release"``, ``"evict"``, or ``"migrate"``,
+  * ``on_retrain(service)``      — the prediction service's online
+    retraining policy fired (forest refit + epoch bump + cache clear).
+
+``EventHub`` fans one event out to every registered observer; the hub
+with no observers is the default everywhere and costs one empty-list
+iteration per event, so the instrumented and bare runs are the same
+code path (parity gates depend on that).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+
+class Observer:
+    """Base observer: subclass and override the hooks you care about.
+
+    Hooks must not mutate simulation state — they exist so benchmarks
+    observe without perturbing (the A/B parity gates run with and
+    without observers and assert identical results).
+    """
+
+    def on_tick(self, now: float, sim) -> None:
+        pass
+
+    def on_schedule(self, now: float, fn: str, placements) -> None:
+        pass
+
+    def on_scale(self, now: float, fn: str, event: str,
+                 count: int) -> None:
+        pass
+
+    def on_retrain(self, service) -> None:
+        pass
+
+
+class EventHub(Observer):
+    """Fan-out of control-plane events to registered observers.
+
+    An ``EventHub`` is itself an ``Observer``, so hubs nest (a platform
+    hub can subscribe to another platform's hub)."""
+
+    __slots__ = ("observers",)
+
+    def __init__(self, observers: Iterable[Observer] = ()):
+        self.observers: List[Observer] = list(observers)
+
+    def add(self, obs: Observer) -> Observer:
+        self.observers.append(obs)
+        return obs
+
+    def remove(self, obs: Observer) -> None:
+        self.observers.remove(obs)
+
+    # -- fan-out ----------------------------------------------------------
+
+    def on_tick(self, now: float, sim) -> None:
+        for o in self.observers:
+            o.on_tick(now, sim)
+
+    def on_schedule(self, now: float, fn: str, placements) -> None:
+        for o in self.observers:
+            o.on_schedule(now, fn, placements)
+
+    def on_scale(self, now: float, fn: str, event: str,
+                 count: int) -> None:
+        for o in self.observers:
+            o.on_scale(now, fn, event, count)
+
+    def on_retrain(self, service) -> None:
+        for o in self.observers:
+            o.on_retrain(service)

@@ -1,0 +1,569 @@
+"""``repro.platform`` — the unified control-plane API.
+
+Jiagu's core claim is architectural: prediction, scheduling, and scaling
+are decoupled stages cooperating through narrow interfaces (pre-decision
+capacity tables §4, dual-staged scaling §5).  This module is that
+architecture as an API:
+
+  * **Capability protocols** — the autoscaler and simulator consume
+    their collaborators through typed capabilities (``CapacityProvider``,
+    ``ReleasePicker``, ``LogicalStartPicker``, ``Router``), never
+    through concrete class identity, so an RL scheduler, a harvesting
+    scaler, or a locality-aware router plugs in without touching the
+    run loop.
+  * **One validated config tree** — ``PlatformConfig`` (cluster /
+    scenario / scheduler / scaling / prediction / simulation sections)
+    with a strict ``to_dict``/``from_dict`` round trip, so benchmark
+    manifests are plain JSON-able dicts and every schema/engine
+    consistency rule fires at construction, not mid-run.
+  * **Name-based registries** — schedulers, scenario kinds, trace
+    programs and routers are selected by string
+    (``register_scheduler`` / ``register_scenario`` / ``register_trace``
+    / ``register_router``), so benchmarks, examples and manifests never
+    import concrete classes.
+  * **The facade** — ``Platform.build(scenario=..., config=...)``
+    assembles the world (ground truth, profiles, trained forest),
+    cluster, scheduler, autoscaler and simulation, wires the observer
+    hub (``on_tick`` / ``on_schedule`` / ``on_scale`` / ``on_retrain``)
+    and returns a runnable ``Platform``; ``run()`` drives the tick loop.
+
+``Simulation``, ``build_simulation`` and ``scenario_simulation`` remain
+as thin shims over the same machinery, so the legacy/engine/service
+parity gates run unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, Iterable, List, Optional,
+                    Protocol, Tuple, Union, runtime_checkable)
+
+from .capacity import M_MAX_DEFAULT
+from .cluster import Cluster, Node
+from .events import EventHub, Observer
+from .interference import NodeResources
+from .prediction_service import INFERENCE_ENGINES, get_schema
+from .profiles import FunctionSpec
+from .registry import Registry
+from .scheduler import (BaseScheduler, SchedulerBuildContext,
+                        SchedulerEntry, build_scheduler,
+                        register_scheduler, registered_schedulers,
+                        scheduler_entry)
+from .scenarios import (NodeClass, Scenario, ScenarioWorld,
+                        get_scenario_builder, make_scenario,
+                        register_scenario, registered_scenarios,
+                        scenario_simulation, scenario_world)
+from .simulator import EqualSplitRouter, SimResult, Simulation
+from .traces import get_trace, register_trace, registered_traces
+
+
+class PlatformConfigError(ValueError):
+    """A ``PlatformConfig`` failed construction-time validation."""
+
+
+# ---------------------------------------------------------------------------
+# Capability protocols
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class CapacityProvider(Protocol):
+    """Best-known capacity of a function on a node — what the
+    autoscaler's migration targeting and consolidation consume.  The
+    default (``autoscaler.SchedulerCapacityProvider``) reads the node's
+    capacity table, then falls back to a zero-cost prediction-service
+    cache hint; None means "unknown", and callers must never run
+    inference to find out (migration is not a critical path)."""
+
+    def node_capacity(self, node: Node, fn: str) -> Optional[int]:
+        ...
+
+
+@runtime_checkable
+class ReleasePicker(Protocol):
+    """Which (node, count) pairs to drain when dual-staged scaling
+    releases excess instances (or traditional keep-alive evicts them).
+    ``BaseScheduler`` provides the greedy least-loaded default."""
+
+    def pick_release_nodes(self, fn: str, k: int) -> List[Tuple[Node, int]]:
+        ...
+
+
+@runtime_checkable
+class LogicalStartPicker(Protocol):
+    """Which cached instances to re-saturate (<1 ms logical cold
+    starts) when load rises.  ``BaseScheduler`` provides a greedy
+    most-cached-first default so *any* scheduler that opts into
+    dual-staged scaling benefits; ``JiaguScheduler`` overrides it to
+    absorb only up to the capacity table's bound."""
+
+    def pick_logical_start_nodes(self, fn: str, k: int
+                                 ) -> List[Tuple[Node, int]]:
+        ...
+
+
+@runtime_checkable
+class Router(Protocol):
+    """Per-tick load routing policy: how much of a function's traffic a
+    node's saturated instances serve.  Returns
+    ``(per_instance_rps, requests_routed_to_node)``; the default is the
+    paper's equal split (``simulator.EqualSplitRouter``)."""
+
+    def route(self, spec: FunctionSpec, fn_rps: float, node: Node,
+              n_sat: float, total_sat: int) -> Tuple[float, float]:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Router registry
+# ---------------------------------------------------------------------------
+
+_ROUTERS = Registry("router")
+
+
+def register_router(name: str, factory: Optional[Callable[[], Router]]
+                    = None, *, overwrite: bool = False):
+    """Register a ``Router`` factory under ``name`` (usable as a class
+    decorator)."""
+    return _ROUTERS.register(name, factory, overwrite=overwrite)
+
+
+def get_router(name: str) -> Callable[[], Router]:
+    return _ROUTERS.get(name)
+
+
+def registered_routers() -> List[str]:
+    return _ROUTERS.names()
+
+
+register_router("equal-split", EqualSplitRouter)
+
+
+# ---------------------------------------------------------------------------
+# The config tree
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class NodeClassConfig:
+    """One server shape of the fleet mix, in manifest form."""
+
+    name: str = "std"
+    cpu_mcores: float = 48_000.0
+    mem_mb: float = 131_072.0
+    mem_bw_gbps: float = 68.0
+    llc_mb: float = 60.0
+    weight: int = 1
+
+    def to_node_class(self) -> NodeClass:
+        return NodeClass(self.name, NodeResources(
+            cpu_mcores=self.cpu_mcores, mem_mb=self.mem_mb,
+            mem_bw_gbps=self.mem_bw_gbps, llc_mb=self.llc_mb),
+            weight=self.weight)
+
+
+@dataclass
+class ClusterSection:
+    """Fleet topology.  ``node_classes=None`` uses the scenario default
+    (heterogeneous std+large mix, or std-only with
+    ``heterogeneous=False``); an explicit list overrides it."""
+
+    node_classes: Optional[List[NodeClassConfig]] = None
+    heterogeneous: bool = True
+    max_nodes: Optional[int] = None
+
+    def to_node_classes(self) -> Optional[List[NodeClass]]:
+        if self.node_classes is None:
+            return None
+        return [nc.to_node_class() for nc in self.node_classes]
+
+
+@dataclass
+class ScenarioSection:
+    """World description: population + trace program + scale."""
+
+    kind: str = "burst-storm"
+    n_functions: int = 24
+    duration_s: int = 600
+    target_nodes: int = 64
+    seed: int = 0
+    #: population seed, decoupled from the trace seed (None -> ``seed``)
+    spec_seed: Optional[int] = None
+    zipf_s: float = 1.2
+    utilization: float = 0.8
+    #: passthrough to the registered trace builder (``coherence=`` for
+    #: burst storms, ``path=`` for replayed CSV dumps, ...)
+    trace_kw: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class SchedulerSection:
+    name: str = "jiagu"
+    m_max: int = M_MAX_DEFAULT
+    max_candidates: int = 4      # gsight-style candidate fan-out
+
+
+@dataclass
+class ScalingSection:
+    release_s: float = 45.0
+    keepalive_s: float = 60.0
+    init_ms: float = 8.4         # cfork container init; docker: 85.5
+    #: None -> the scheduler registry's per-scheduler default (dual for
+    #: Jiagu, traditional keep-alive for baselines); an explicit bool
+    #: forces the mode for any scheduler
+    dual_staged: Optional[bool] = None
+    migrate: bool = True
+
+
+@dataclass
+class PredictionSection:
+    schema_version: int = 1
+    n_train: int = 2000
+    n_trees: int = 24
+    max_depth: int = 8
+    #: RFR inference engine override (numpy / jax / pallas); None keeps
+    #: the predictor's default
+    engine: Optional[str] = None
+    online_retrain: bool = False
+    retrain_every: Optional[int] = None
+
+
+@dataclass
+class SimulationSection:
+    #: None -> the SimConfig default (the PredictionService path);
+    #: False forces the legacy per-node reference oracle
+    use_capacity_engine: Optional[bool] = None
+    collect_samples: bool = False
+    sample_every_s: Optional[int] = None
+    seed: int = 0
+    router: str = "equal-split"
+
+
+_SECTIONS = {
+    "cluster": ClusterSection,
+    "scenario": ScenarioSection,
+    "scheduler": SchedulerSection,
+    "scaling": ScalingSection,
+    "prediction": PredictionSection,
+    "simulation": SimulationSection,
+}
+
+
+def _load_section(cls, data, where: str):
+    if data is None:
+        return cls()
+    if isinstance(data, cls):
+        return data
+    if not isinstance(data, dict):
+        raise PlatformConfigError(
+            f"{where}: expected a dict, got {type(data).__name__}")
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(data) - known)
+    if unknown:
+        raise PlatformConfigError(
+            f"{where}: unknown keys {unknown} (known: {sorted(known)})")
+    kw = dict(data)
+    if cls is ClusterSection and kw.get("node_classes") is not None:
+        kw["node_classes"] = [
+            nc if isinstance(nc, NodeClassConfig)
+            else _load_section(NodeClassConfig, nc,
+                               f"{where}.node_classes[{i}]")
+            for i, nc in enumerate(kw["node_classes"])]
+    if cls is ScenarioSection and kw.get("trace_kw") is not None:
+        kw["trace_kw"] = dict(kw["trace_kw"])
+    return cls(**kw)
+
+
+@dataclass
+class PlatformConfig:
+    """The whole control plane as one validated, serializable tree.
+
+    ``from_dict`` is strict (unknown sections/keys raise
+    ``PlatformConfigError``) and ``from_dict(to_dict(cfg)) == cfg``, so
+    benchmark manifests round-trip losslessly through JSON."""
+
+    cluster: ClusterSection = field(default_factory=ClusterSection)
+    scenario: ScenarioSection = field(default_factory=ScenarioSection)
+    scheduler: SchedulerSection = field(default_factory=SchedulerSection)
+    scaling: ScalingSection = field(default_factory=ScalingSection)
+    prediction: PredictionSection = field(default_factory=PredictionSection)
+    simulation: SimulationSection = field(default_factory=SimulationSection)
+
+    # -- (de)serialization ------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain nested dicts (JSON-able; ``from_dict`` inverts it)."""
+        return {name: dataclasses.asdict(getattr(self, name))
+                for name in _SECTIONS}
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "PlatformConfig":
+        if not isinstance(data, dict):
+            raise PlatformConfigError(
+                f"manifest: expected a dict, got {type(data).__name__}")
+        unknown = sorted(set(data) - set(_SECTIONS))
+        if unknown:
+            raise PlatformConfigError(
+                f"manifest: unknown sections {unknown} "
+                f"(known: {sorted(_SECTIONS)})")
+        return cls(**{name: _load_section(scls, data.get(name), name)
+                      for name, scls in _SECTIONS.items()})
+
+    @classmethod
+    def coerce(cls, config: Union["PlatformConfig", Dict[str, Any], None]
+               ) -> "PlatformConfig":
+        if config is None:
+            return cls()
+        if isinstance(config, cls):
+            return config
+        return cls.from_dict(config)
+
+    # -- construction-time validation -------------------------------------
+
+    def validate(self) -> "PlatformConfig":
+        """Every schema/engine/scheduler consistency rule, checked before
+        anything is built (these used to surface as scattered
+        ``Simulation.__init__`` raises mid-assembly)."""
+        sc, p, sim = self.scenario, self.prediction, self.simulation
+        entry = scheduler_entry(self.scheduler.name)   # unknown -> raises
+        get_scenario_builder(sc.kind)                  # unknown -> raises
+        get_router(sim.router)                         # unknown -> raises
+        get_schema(p.schema_version)                   # unknown -> raises
+        if sc.n_functions <= 0 or sc.duration_s <= 0 \
+                or sc.target_nodes <= 0:
+            raise PlatformConfigError(
+                "scenario: n_functions, duration_s and target_nodes must "
+                "be positive")
+        if p.engine is not None and p.engine not in INFERENCE_ENGINES:
+            raise PlatformConfigError(
+                f"prediction.engine {p.engine!r} unknown "
+                f"(have {INFERENCE_ENGINES})")
+        if p.schema_version != 1 and sim.use_capacity_engine is False:
+            raise PlatformConfigError(
+                "prediction.schema_version >= 2 requires the "
+                "PredictionService path; the legacy per-node solver "
+                "(simulation.use_capacity_engine=False) only speaks the "
+                "v1 feature layout")
+        if p.online_retrain and sim.use_capacity_engine is False:
+            raise PlatformConfigError(
+                "prediction.online_retrain requires a PredictionService "
+                "(simulation.use_capacity_engine=False selects the "
+                "legacy path, which has no on_samples retraining loop)")
+        if p.online_retrain and not sim.collect_samples:
+            raise PlatformConfigError(
+                "prediction.online_retrain needs runtime samples: set "
+                "simulation.collect_samples=True")
+        if not entry.needs_predictor and (p.schema_version != 1
+                                          or p.online_retrain):
+            backed = [n for n in registered_schedulers()
+                      if scheduler_entry(n).needs_predictor]
+            raise PlatformConfigError(
+                f"scheduler {entry.name!r} runs without a predictor; "
+                f"schema v2 / online retraining need a prediction-backed "
+                f"scheduler ({backed})")
+        return self
+
+
+def scenario_from_config(cfg: PlatformConfig) -> Scenario:
+    """Build just the ``Scenario`` a config describes (the same call
+    ``Platform.build`` makes) — lets benchmarks stage scenario/world
+    construction outside their timers while still driving everything
+    from one manifest."""
+    sc = cfg.scenario
+    return make_scenario(
+        sc.kind, n_functions=sc.n_functions, duration_s=sc.duration_s,
+        target_nodes=sc.target_nodes, seed=sc.seed,
+        spec_seed=sc.spec_seed, zipf_s=sc.zipf_s,
+        heterogeneous=cfg.cluster.heterogeneous,
+        node_classes=cfg.cluster.to_node_classes(),
+        utilization=sc.utilization, **sc.trace_kw)
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+
+class Platform:
+    """A fully assembled control plane: config + scenario + world +
+    simulation + observer hub.  Construct with ``Platform.build``."""
+
+    def __init__(self, config: PlatformConfig, scenario: Scenario,
+                 world: ScenarioWorld, simulation: Simulation,
+                 hub: EventHub):
+        self.config = config
+        self.scenario = scenario
+        self.world = world
+        self.simulation = simulation
+        self.hub = hub
+        self.result: Optional[SimResult] = None
+
+    # -- component access --------------------------------------------------
+
+    @property
+    def scheduler(self) -> BaseScheduler:
+        return self.simulation.scheduler
+
+    @property
+    def autoscaler(self):
+        return self.simulation.autoscaler
+
+    @property
+    def cluster(self) -> Cluster:
+        return self.simulation.cluster
+
+    @property
+    def service(self):
+        """The scheduler's PredictionService (None on the legacy path)."""
+        return self.scheduler.prediction_service
+
+    @property
+    def router(self) -> Router:
+        return self.simulation.router
+
+    # -- observers ----------------------------------------------------------
+
+    def add_observer(self, obs: Observer) -> Observer:
+        return self.hub.add(obs)
+
+    def remove_observer(self, obs: Observer) -> None:
+        self.hub.remove(obs)
+
+    # -- run ----------------------------------------------------------------
+
+    def run(self, duration_s: Optional[int] = None) -> SimResult:
+        self.result = self.simulation.run(duration_s)
+        return self.result
+
+    def to_manifest(self) -> Dict[str, Any]:
+        """The config tree as a plain dict (``PlatformConfig.to_dict``)."""
+        return self.config.to_dict()
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(cls, scenario: Union[Scenario, str, None] = None,
+              config: Union[PlatformConfig, Dict[str, Any], None] = None,
+              *, world: Optional[ScenarioWorld] = None,
+              router: Optional[Router] = None,
+              observers: Iterable[Observer] = ()) -> "Platform":
+        """Assemble a runnable platform.
+
+        ``config`` may be a ``PlatformConfig`` or a plain manifest dict
+        (validated strictly); ``scenario`` overrides the config's
+        scenario section with a prebuilt ``Scenario`` (or a kind
+        string).  ``world`` reuses a prebuilt ``ScenarioWorld`` (its
+        feature schema must match the config's); ``router``/
+        ``observers`` plug the routing policy and observer hooks.  All
+        schema/engine consistency validation happens here, before any
+        component exists."""
+        cfg = PlatformConfig.coerce(config)
+        if isinstance(scenario, str):
+            cfg = dataclasses.replace(
+                cfg, scenario=dataclasses.replace(cfg.scenario,
+                                                  kind=scenario))
+            scenario = None
+        cfg.validate()
+        sc, p, sim_cfg = cfg.scenario, cfg.prediction, cfg.simulation
+        hub = EventHub(observers)
+        if scenario is None:
+            scenario = scenario_from_config(cfg)
+        if world is None:
+            world = scenario_world(
+                scenario, n_train=p.n_train, n_trees=p.n_trees,
+                max_depth=p.max_depth, schema_version=p.schema_version)
+        elif world.schema_version != p.schema_version:
+            raise PlatformConfigError(
+                f"mismatched service schema: the prebuilt world speaks "
+                f"schema v{world.schema_version} but the config requests "
+                f"v{p.schema_version}; rebuild the world or align "
+                f"prediction.schema_version")
+        simulation = scenario_simulation(
+            scenario, cfg.scheduler.name, world=world,
+            release_s=cfg.scaling.release_s,
+            keepalive_s=cfg.scaling.keepalive_s,
+            init_ms=cfg.scaling.init_ms, migrate=cfg.scaling.migrate,
+            m_max=cfg.scheduler.m_max,
+            max_candidates=cfg.scheduler.max_candidates,
+            use_engine=sim_cfg.use_capacity_engine,
+            collect_samples=sim_cfg.collect_samples,
+            online_retrain=p.online_retrain,
+            retrain_every=p.retrain_every,
+            sample_every_s=sim_cfg.sample_every_s,
+            sim_seed=sim_cfg.seed,
+            max_nodes=cfg.cluster.max_nodes,
+            dual_staged=cfg.scaling.dual_staged,
+            router=router or get_router(sim_cfg.router)(),
+            events=hub)
+        service = simulation.scheduler.prediction_service
+        if service is not None:
+            if p.engine is not None:
+                service.set_engine(p.engine)
+            service.add_retrain_listener(hub.on_retrain)
+        return cls(cfg, scenario, world, simulation, hub)
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: every registered scheduler from pure config dicts
+# ---------------------------------------------------------------------------
+
+
+def smoke(duration_s: int = 30, verbose: bool = True
+          ) -> Dict[str, SimResult]:
+    """Build every registered scheduler against one scenario from pure
+    manifest dicts and run ``duration_s`` ticks — the
+    ``scripts/verify.sh`` platform smoke step.  Raises if any build or
+    run fails or runs short.  The scenario and trained world come from
+    the first manifest and are shared across schedulers (they differ
+    only in the scheduler section; retraining the forest per scheduler
+    would quadruple the smoke's cost for nothing)."""
+    results: Dict[str, SimResult] = {}
+    scenario = world = None
+    for name in registered_schedulers():
+        manifest = {
+            "scenario": {"kind": "burst-storm", "n_functions": 4,
+                         "duration_s": duration_s, "target_nodes": 8,
+                         "seed": 0},
+            "scheduler": {"name": name},
+            "prediction": {"n_train": 300, "n_trees": 8},
+        }
+        plat = Platform.build(scenario=scenario, config=manifest,
+                              world=world)
+        scenario, world = plat.scenario, plat.world
+        res = plat.run()
+        if res.ticks != duration_s:
+            raise RuntimeError(
+                f"platform smoke: {name} ran {res.ticks}/{duration_s} "
+                f"ticks")
+        results[name] = res
+        if verbose:
+            print(f"# platform-smoke {name}: density={res.density:.2f} "
+                  f"qos={res.qos_violation_rate:.4f} "
+                  f"peak_nodes={res.nodes_peak}", flush=True)
+    if verbose:
+        print(f"# platform-smoke: {len(results)} schedulers x 1 scenario "
+              f"x {duration_s} ticks => PASS")
+    return results
+
+
+__all__ = [
+    # facade + config
+    "Platform", "PlatformConfig", "PlatformConfigError",
+    "ClusterSection", "ScenarioSection", "SchedulerSection",
+    "ScalingSection", "PredictionSection", "SimulationSection",
+    "NodeClassConfig",
+    # capability protocols
+    "CapacityProvider", "ReleasePicker", "LogicalStartPicker", "Router",
+    # observers
+    "Observer", "EventHub",
+    # registries
+    "register_scheduler", "registered_schedulers", "scheduler_entry",
+    "build_scheduler", "SchedulerEntry", "SchedulerBuildContext",
+    "register_scenario", "registered_scenarios", "get_scenario_builder",
+    "register_trace", "registered_traces", "get_trace",
+    "register_router", "registered_routers", "get_router",
+    # defaults + helpers
+    "EqualSplitRouter", "scenario_from_config",
+    # smoke
+    "smoke",
+]

@@ -413,6 +413,7 @@ class PredictionService:
         self._cache: Dict[SigKey, Tuple[int, int]] = {}  # key -> (epoch, cap)
         self._epoch = predictor.retrain_count
         self._pending_samples = 0
+        self._retrain_listeners: List = []
 
     # -- inference engine selection --------------------------------------
 
@@ -678,6 +679,14 @@ class PredictionService:
         self.stats.retrains += 1
         self._pending_samples = 0
         self._check_epoch()     # epoch bump -> invalidate()
+        for cb in self._retrain_listeners:
+            cb(self)
+
+    def add_retrain_listener(self, cb) -> None:
+        """Register ``cb(service)`` to fire after every retrain (forest
+        refit + epoch bump + cache clear) — the platform's ``on_retrain``
+        observer hook subscribes here."""
+        self._retrain_listeners.append(cb)
 
     def refresh_tables(self, nodes: Sequence[Node],
                        m_max: Optional[int] = None) -> int:

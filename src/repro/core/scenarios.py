@@ -35,15 +35,17 @@ import numpy as np
 from .autoscaler import Autoscaler, ScalingConfig
 from .capacity import M_MAX_DEFAULT, QoSStore
 from .cluster import Cluster
+from .events import EventHub
 from .interference import GroundTruth, NodeResources
 from .predictor import PerfPredictor
 from .profiles import FunctionSpec, ProfileStore, synthetic_functions
-from .scheduler import (BaseScheduler, GsightScheduler, JiaguScheduler,
-                        K8sScheduler, OwlScheduler)
+from .registry import Registry
+from .scheduler import (SchedulerBuildContext, build_scheduler,
+                        scheduler_entry)
 from .simulator import SimConfig, Simulation, generate_dataset
 from .traces import (Trace, azure_sparse_trace, burst_storm_trace,
                      coldstart_churn_trace, diurnal_shift_trace,
-                     realworld_trace)
+                     realworld_trace, replay_trace)
 
 
 @dataclass(frozen=True)
@@ -63,16 +65,77 @@ LARGE_NODE = NodeClass("large", NodeResources(
     cpu_mcores=96_000.0, mem_mb=262_144.0, mem_bw_gbps=136.0,
     llc_mb=120.0), weight=1)
 
+#: the generated scenario kinds (the large-cluster study sweeps these);
+#: the full registry — including ``replay`` and anything user-registered
+#: — is ``registered_scenarios()``
 SCENARIO_KINDS = ("burst-storm", "diurnal-shift", "coldstart-churn",
                   "azure-sparse", "realworld")
 
-_TRACE_BUILDERS = {
-    "burst-storm": burst_storm_trace,
-    "diurnal-shift": diurnal_shift_trace,
-    "coldstart-churn": coldstart_churn_trace,
-    "azure-sparse": azure_sparse_trace,
-    "realworld": realworld_trace,
-}
+
+# ---------------------------------------------------------------------------
+# Scenario-kind registry (the repro.platform name-based selection)
+# ---------------------------------------------------------------------------
+
+_SCENARIOS = Registry("scenario kind")
+
+
+def register_scenario(kind: str, trace_builder=None, *,
+                      overwrite: bool = False):
+    """Register a scenario kind: a trace-program builder with the
+    ``(fn_names, duration_s=..., seed=..., scale_rps=..., **kw)``
+    signature, selectable by name from ``make_scenario`` and
+    ``PlatformConfig`` manifests.  Usable as a decorator."""
+    return _SCENARIOS.register(kind, trace_builder, overwrite=overwrite)
+
+
+def get_scenario_builder(kind: str):
+    return _SCENARIOS.get(kind)
+
+
+def registered_scenarios() -> List[str]:
+    return _SCENARIOS.names()
+
+
+for _kind, _builder in (("burst-storm", burst_storm_trace),
+                        ("diurnal-shift", diurnal_shift_trace),
+                        ("coldstart-churn", coldstart_churn_trace),
+                        ("azure-sparse", azure_sparse_trace),
+                        ("realworld", realworld_trace)):
+    register_scenario(_kind, _builder)
+del _kind, _builder
+
+
+@register_scenario("replay")
+def replay_scenario_trace(fn_names: Sequence[str], duration_s: int = 3600,
+                          seed: int = 0,
+                          scale_rps: Optional[Dict[str, float]] = None,
+                          *, path=None, name: Optional[str] = None
+                          ) -> Trace:
+    """Feed a real invocation dump (``traces.replay_trace`` CSV format)
+    through the scenario machinery: the recorded per-function series are
+    assigned to the synthetic population (seed-permuted, cycling when
+    the population outnumbers the recording), normalized to unit mean so
+    the population's Zipf popularity shares (``scale_rps``) and the
+    ``scale_trace_to_nodes`` cluster-size rescale stay meaningful, and
+    tiled/clamped to ``duration_s``.  Pass the CSV via
+    ``make_scenario("replay", ..., path=...)`` (the ``trace_kw``
+    passthrough) — so Azure/Huawei-style dumps run in the large-cluster
+    suite exactly like the generated trace programs."""
+    if path is None:
+        raise ValueError("replay scenario requires path=<csv> "
+                         "(make_scenario trace_kw)")
+    src = replay_trace(path)
+    recorded = [src.rps[k] for k in sorted(src.rps)]
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(recorded))
+    out: Dict[str, np.ndarray] = {}
+    for i, fn in enumerate(fn_names):
+        base = recorded[order[i % len(recorded)]]
+        mean = float(base.mean())
+        shape = base / mean if mean > 0 else base
+        series = np.resize(shape, duration_s)  # tile/clamp to duration
+        out[fn] = series * float((scale_rps or {}).get(fn, 1.0))
+    return Trace(name or f"replay-{src.name}-seed{seed}", out, duration_s)
 
 
 @dataclass
@@ -200,30 +263,35 @@ def scale_trace_to_nodes(trace: Trace, specs: Dict[str, FunctionSpec],
 def make_scenario(kind: str, *, specs: Optional[Dict[str, FunctionSpec]]
                   = None, n_functions: int = 24, duration_s: int = 600,
                   target_nodes: int = 64, seed: int = 0,
+                  spec_seed: Optional[int] = None,
                   zipf_s: float = 1.2, heterogeneous: bool = True,
+                  node_classes: Optional[Sequence[NodeClass]] = None,
                   utilization: float = 0.8,
                   name: Optional[str] = None, **trace_kw) -> Scenario:
     """Build one scenario: Zipf-popular population + `kind` trace program
-    scaled to `target_nodes`, on a (by default heterogeneous) fleet.
+    (any registered scenario kind) scaled to `target_nodes`, on a (by
+    default heterogeneous) fleet.
 
+    ``spec_seed`` decouples the function population's seed from the
+    trace seed (defaults to ``seed``); ``node_classes`` overrides the
+    ``heterogeneous`` std/large default with an explicit topology mix.
     ``trace_kw`` passes through to the trace generator (e.g.
-    ``coherence=`` for burst storms, ``n_regions=`` for diurnal shift).
+    ``coherence=`` for burst storms, ``n_regions=`` for diurnal shift,
+    ``path=`` for replayed CSV dumps).
     """
-    if kind not in _TRACE_BUILDERS:
-        raise ValueError(f"unknown scenario kind {kind!r} "
-                         f"(have {sorted(_TRACE_BUILDERS)})")
+    builder = get_scenario_builder(kind)
     if specs is None:
-        specs = scenario_functions(n_functions, seed=seed)
+        specs = scenario_functions(
+            n_functions, seed=seed if spec_seed is None else spec_seed)
     names = sorted(specs)
     # skewed popularity -> per-function peak RPS shares; normalized to a
     # mean of 1 so the global rescale below sets the absolute level
     w = zipf_weights(len(names), s=zipf_s, seed=seed + 1)
     scale_rps = {fn: float(len(names) * wi) for fn, wi in zip(names, w)}
-    trace = _TRACE_BUILDERS[kind](
-        names, duration_s=duration_s, seed=seed, scale_rps=scale_rps,
-        **trace_kw)
-    classes = [STANDARD_NODE, LARGE_NODE] if heterogeneous \
-        else [STANDARD_NODE]
+    trace = builder(names, duration_s=duration_s, seed=seed,
+                    scale_rps=scale_rps, **trace_kw)
+    classes = list(node_classes) if node_classes else (
+        [STANDARD_NODE, LARGE_NODE] if heterogeneous else [STANDARD_NODE])
     trace = scale_trace_to_nodes(trace, specs, target_nodes, classes,
                                  utilization)
     return Scenario(name or f"{kind}-n{target_nodes}-seed{seed}", kind,
@@ -301,9 +369,17 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
                      schema_version: int = 1,
                      online_retrain: bool = False,
                      retrain_every: Optional[int] = None,
-                     sample_every_s: Optional[int] = None) -> Simulation:
+                     sample_every_s: Optional[int] = None,
+                     dual_staged: Optional[bool] = None,
+                     max_candidates: int = 4,
+                     sim_seed: int = 0,
+                     router=None,
+                     events: Optional[EventHub] = None) -> Simulation:
     """The one scheduler-dispatch/autoscaler/SimConfig assembly, shared
-    by ``scenario_simulation`` and ``benchmarks.common.make_sim``.
+    by ``scenario_simulation``, ``platform.Platform.build`` and
+    ``benchmarks.common.make_sim``.  Schedulers come from the name-based
+    registry (``scheduler.register_scheduler``), so any registered
+    policy is selectable by string.
 
     ``use_engine=None`` keeps the ``SimConfig`` default (the
     PredictionService path); ``False`` forces the legacy per-node
@@ -311,30 +387,25 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
     ``schema_version`` selects the feature schema of the attached
     service (the predictor must be trained on matching rows) and
     ``online_retrain``/``retrain_every`` arm the in-run incremental
-    retraining loop.
+    retraining loop.  ``dual_staged=None`` applies the registry's
+    per-scheduler default (dual-staged for Jiagu, traditional
+    keep-alive for the baselines, gated by ``dual``); an explicit bool
+    forces it for any scheduler — the greedy picker defaults make the
+    release / logical-cold-start machinery meaningful for all of them.
+    ``router``/``events`` plug the routing policy and observer hub.
     """
-    sched: BaseScheduler
-    if scheduler == "jiagu":
-        sched = JiaguScheduler(cluster, store, qos, predictor, m_max=m_max)
-    elif scheduler == "gsight":
-        from .prediction_service import EngineConfig, PredictionService
-        sched = GsightScheduler(
-            cluster, store, qos, predictor,
-            service=PredictionService(
-                predictor, store, qos, specs,
-                EngineConfig(m_max=m_max, retrain_every=retrain_every),
-                schema=schema_version))
-    elif scheduler == "owl":
-        sched = OwlScheduler(cluster, store, qos)
-    elif scheduler == "k8s":
-        sched = K8sScheduler(cluster, store, qos)
-    else:
-        raise ValueError(f"unknown scheduler {scheduler!r}")
+    entry = scheduler_entry(scheduler)
+    sched = build_scheduler(scheduler, SchedulerBuildContext(
+        cluster=cluster, store=store, qos=qos, specs=specs,
+        predictor=predictor, m_max=m_max, max_candidates=max_candidates,
+        schema_version=schema_version, retrain_every=retrain_every))
+    if dual_staged is None:
+        dual_staged = dual and entry.dual_staged_default
     aut = Autoscaler(cluster, sched, ScalingConfig(
         release_s=release_s, keepalive_s=keepalive_s,
-        dual_staged=dual and scheduler == "jiagu", init_ms=init_ms,
-        migrate=migrate))
-    cfg = SimConfig(collect_samples=collect_samples,
+        dual_staged=dual_staged, init_ms=init_ms,
+        migrate=migrate), events=events)
+    cfg = SimConfig(collect_samples=collect_samples, seed=sim_seed,
                     schema_version=schema_version,
                     online_retrain=online_retrain,
                     retrain_every=retrain_every)
@@ -343,7 +414,8 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
     if use_engine is not None:
         cfg.use_capacity_engine = use_engine
     return Simulation(specs, trace, sched, aut, gt, store, qos,
-                      predictor=predictor, cfg=cfg)
+                      predictor=predictor, cfg=cfg, router=router,
+                      events=events)
 
 
 def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
@@ -358,7 +430,12 @@ def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
                         sample_every_s: Optional[int] = None,
                         n_train: int = 2000, n_trees: int = 24,
                         schema_version: Optional[int] = None,
-                        max_nodes: Optional[int] = None) -> Simulation:
+                        max_nodes: Optional[int] = None,
+                        dual_staged: Optional[bool] = None,
+                        max_candidates: int = 4,
+                        sim_seed: int = 0,
+                        router=None,
+                        events: Optional[EventHub] = None) -> Simulation:
     """Assemble a full Simulation for `scenario` (world built on demand,
     heterogeneous elastic cluster from the scenario's node classes).
 
@@ -373,7 +450,8 @@ def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
             f"schema_version={schema_version} conflicts with the prebuilt "
             f"world's schema v{world.schema_version}; rebuild the world "
             f"with scenario_world(..., schema_version={schema_version})")
-    pred = world.predictor if scheduler in ("jiagu", "gsight") else None
+    pred = world.predictor \
+        if scheduler_entry(scheduler).needs_predictor else None
     return build_simulation(
         scenario.specs, scenario.trace, scenario.build_cluster(max_nodes),
         world.gt, world.store, world.qos, scheduler, pred, dual=dual,
@@ -381,4 +459,6 @@ def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
         migrate=migrate, m_max=m_max, use_engine=use_engine,
         collect_samples=collect_samples, online_retrain=online_retrain,
         retrain_every=retrain_every, sample_every_s=sample_every_s,
-        schema_version=world.schema_version)
+        schema_version=world.schema_version, dual_staged=dual_staged,
+        max_candidates=max_candidates, sim_seed=sim_seed,
+        router=router, events=events)

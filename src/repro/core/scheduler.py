@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -21,8 +21,9 @@ from .capacity import M_MAX_DEFAULT, QoSStore, capacity_of, \
 from .cluster import CapEntry, Cluster, Node
 from .metrics import Reservoir
 from .predictor import PerfPredictor
-from .prediction_service import PredictionService
+from .prediction_service import EngineConfig, PredictionService
 from .profiles import FunctionSpec, ProfileStore
+from .registry import Registry
 
 FAST_PATH_MS = 0.05     # capacity-table lookup + comparison
 REROUTE_MS = 0.5        # logical cold start: K8s Service label flip
@@ -66,6 +67,9 @@ class Placement:
 
 class BaseScheduler:
     name = "base"
+    #: table-driven schedulers (Jiagu) accept an attached
+    #: ``PredictionService`` for batched/cached capacity solving
+    accepts_service = False
 
     def __init__(self, cluster: Cluster, store: ProfileStore,
                  qos: QoSStore):
@@ -89,6 +93,57 @@ class BaseScheduler:
     def observe(self, node: Node, ok: bool, now: float):
         """Runtime QoS observation feedback (used by Owl)."""
         pass
+
+    @property
+    def prediction_service(self) -> Optional[PredictionService]:
+        """The scheduler's ``PredictionService``, if it uses one — the
+        ``platform.CapacityProvider`` hint source and the simulator's
+        sample-collection client.  None for table-free baselines."""
+        return None
+
+    def attach_service(self, service: PredictionService) -> None:
+        """Attach a ``PredictionService`` (only meaningful when
+        ``accepts_service``)."""
+        raise TypeError(f"{type(self).__name__} does not accept a "
+                        f"PredictionService")
+
+    # -- dual-staged scaling capabilities (platform.ReleasePicker /
+    # -- platform.LogicalStartPicker; the autoscaler consumes these) ------
+
+    def pick_release_nodes(self, fn: str, k: int) -> List[Tuple[Node, int]]:
+        """Default greedy ``ReleasePicker``: drain least-loaded nodes
+        first so released capacity concentrates (and empty servers can
+        be returned)."""
+        picks = []
+        for node in sorted(self.cluster.nodes_with(fn),
+                           key=lambda n: n.n_instances()):
+            if k <= 0:
+                break
+            take = min(k, node.funcs[fn].n_sat)
+            if take > 0:
+                picks.append((node, take))
+                k -= take
+        return picks
+
+    def pick_logical_start_nodes(self, fn: str, k: int
+                                 ) -> List[Tuple[Node, int]]:
+        """Default greedy ``LogicalStartPicker``: re-saturate cached
+        instances most-cached-first.  Cached instances already hold
+        their memory, so any scheduler that opts into dual-staged
+        scaling can absorb a load rise with <1 ms re-routes instead of
+        real cold starts; capacity-table-driven schedulers (Jiagu)
+        override this to absorb only up to the table's capacity."""
+        picks = []
+        nodes = sorted((n for n in self.cluster.nodes_with(fn)
+                        if n.funcs[fn].n_cached > 0),
+                       key=lambda n: -n.funcs[fn].n_cached)
+        for node in nodes:
+            if k <= 0:
+                break
+            take = min(k, node.funcs[fn].n_cached)
+            picks.append((node, take))
+            k -= take
+        return picks
 
     # -- shared helpers ------------------------------------------------
 
@@ -144,6 +199,7 @@ class K8sScheduler(BaseScheduler):
 
 class JiaguScheduler(BaseScheduler):
     name = "jiagu"
+    accepts_service = True
 
     def __init__(self, cluster: Cluster, store: ProfileStore, qos: QoSStore,
                  predictor: PerfPredictor, m_max: int = M_MAX_DEFAULT,
@@ -155,6 +211,13 @@ class JiaguScheduler(BaseScheduler):
         # the legacy per-node reference path)
         self.engine = engine
         self._pending: Dict[int, float] = {}  # node id -> due time
+
+    @property
+    def prediction_service(self) -> Optional[PredictionService]:
+        return self.engine
+
+    def attach_service(self, service: PredictionService) -> None:
+        self.engine = service
 
     # -- async update machinery -----------------------------------------
 
@@ -309,21 +372,8 @@ class JiaguScheduler(BaseScheduler):
         return out
 
     # -- dual-staged scaling hooks (used by the autoscaler) ---------------
-
-    def pick_release_nodes(self, fn: str, k: int) -> List[Tuple[Node, int]]:
-        """Choose which instances to drain: least-loaded nodes first so
-        released capacity concentrates."""
-        picks = []
-        nodes = sorted((n for n in self.cluster.nodes_with(fn)
-                        if n.funcs[fn].n_sat > 0),
-                       key=lambda n: n.n_instances())
-        for node in nodes:
-            if k <= 0:
-                break
-            take = min(k, node.funcs[fn].n_sat)
-            picks.append((node, take))
-            k -= take
-        return picks
+    # (the base class's greedy pick_release_nodes already drains
+    # least-loaded-first; Jiagu only overrides the logical-start pick)
 
     def pick_logical_start_nodes(self, fn: str, k: int
                                  ) -> List[Tuple[Node, int]]:
@@ -373,6 +423,10 @@ class GsightScheduler(BaseScheduler):
         self.max_candidates = max_candidates
         self.service = service or PredictionService(
             predictor, store, qos, cluster.specs)
+
+    @property
+    def prediction_service(self) -> Optional[PredictionService]:
+        return self.service
 
     def _check_node(self, node: Node, fn: str) -> Tuple[bool, float]:
         """Predict everyone's latency with one more fn instance; per-
@@ -513,3 +567,88 @@ class OwlScheduler(BaseScheduler):
         else:
             self.unsafe.add(key)
             self.safe.discard(key)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler registry (the repro.platform name-based component selection)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SchedulerBuildContext:
+    """Everything a scheduler factory may need.  Factories take what
+    they use and ignore the rest, so one registry signature serves
+    table-driven, per-schedule-inference, and model-free schedulers."""
+
+    cluster: Cluster
+    store: ProfileStore
+    qos: QoSStore
+    specs: Dict[str, FunctionSpec]
+    predictor: Optional[PerfPredictor] = None
+    m_max: int = M_MAX_DEFAULT
+    max_candidates: int = 4
+    schema_version: int = 1
+    retrain_every: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class SchedulerEntry:
+    """One registered scheduler: its factory plus the capability facts
+    the platform needs at assembly time (instead of `isinstance` checks
+    against concrete classes)."""
+
+    name: str
+    factory: Callable[[SchedulerBuildContext], BaseScheduler]
+    needs_predictor: bool = False     # gets the world's trained forest
+    dual_staged_default: bool = False  # opts into dual-staged scaling
+
+
+_SCHEDULERS = Registry("scheduler")
+
+
+def register_scheduler(name: str,
+                       factory: Callable[[SchedulerBuildContext],
+                                         BaseScheduler], *,
+                       needs_predictor: bool = False,
+                       dual_staged_default: bool = False,
+                       overwrite: bool = False) -> SchedulerEntry:
+    """Register a scheduler under ``name`` so benchmarks, examples and
+    ``PlatformConfig`` manifests can select it by string."""
+    return _SCHEDULERS.register(
+        name, SchedulerEntry(name, factory, needs_predictor,
+                             dual_staged_default), overwrite=overwrite)
+
+
+def scheduler_entry(name: str) -> SchedulerEntry:
+    return _SCHEDULERS.get(name)
+
+
+def registered_schedulers() -> List[str]:
+    return _SCHEDULERS.names()
+
+
+def build_scheduler(name: str, ctx: SchedulerBuildContext) -> BaseScheduler:
+    return scheduler_entry(name).factory(ctx)
+
+
+def _make_gsight(ctx: SchedulerBuildContext) -> GsightScheduler:
+    return GsightScheduler(
+        ctx.cluster, ctx.store, ctx.qos, ctx.predictor,
+        max_candidates=ctx.max_candidates,
+        service=PredictionService(
+            ctx.predictor, ctx.store, ctx.qos, ctx.specs,
+            EngineConfig(m_max=ctx.m_max,
+                         retrain_every=ctx.retrain_every),
+            schema=ctx.schema_version))
+
+
+register_scheduler(
+    "jiagu",
+    lambda ctx: JiaguScheduler(ctx.cluster, ctx.store, ctx.qos,
+                               ctx.predictor, m_max=ctx.m_max),
+    needs_predictor=True, dual_staged_default=True)
+register_scheduler("gsight", _make_gsight, needs_predictor=True)
+register_scheduler(
+    "k8s", lambda ctx: K8sScheduler(ctx.cluster, ctx.store, ctx.qos))
+register_scheduler(
+    "owl", lambda ctx: OwlScheduler(ctx.cluster, ctx.store, ctx.qos))

@@ -1,12 +1,18 @@
 """Tick-driven cluster simulator — the "24-node OpenFaaS testbed" of §7.
 
 Each 1-second tick: read trace RPS -> autoscale (dual-staged or
-traditional) -> process async capacity updates -> route load (equal split
-over saturated instances, the paper's load-balancing router) -> measure
-ground-truth latencies per (node, function) -> account QoS violations
-weighted by requests -> sample density.  Training samples for the
-predictor's incremental learning are collected on the fly (the paper's
-runtime dataset maintenance).
+traditional) -> process async capacity updates -> route load (the
+pluggable ``Router`` policy; default: equal split over saturated
+instances, the paper's load-balancing router) -> measure ground-truth
+latencies per (node, function) -> account QoS violations weighted by
+requests -> sample density.  Training samples for the predictor's
+incremental learning are collected on the fly (the paper's runtime
+dataset maintenance).
+
+``Simulation`` is the run loop the ``repro.platform`` facade owns;
+construct it through ``Platform.build`` (or the ``build_simulation`` /
+``scenario_simulation`` shims) to get validated configuration, registry
+-selected components, and observer hooks.
 """
 from __future__ import annotations
 
@@ -18,7 +24,8 @@ import numpy as np
 
 from .autoscaler import Autoscaler, ScalingConfig, ScalingMetrics
 from .capacity import QoSStore
-from .cluster import Cluster
+from .cluster import Cluster, Node
+from .events import EventHub
 from .interference import GroundTruth, NodeResources
 from .metrics import Reservoir
 from .predictor import PerfPredictor, build_features
@@ -26,6 +33,20 @@ from .prediction_service import get_schema
 from .profiles import FunctionSpec, ProfileStore
 from .scheduler import BaseScheduler, SchedMetrics
 from .traces import Trace
+
+
+class EqualSplitRouter:
+    """The paper's load-balancing router: every saturated instance of a
+    function receives an equal share of its traffic, so a node hosting
+    ``n_sat`` of ``total_sat`` instances serves that fraction of the
+    requests.  The default ``platform.Router`` policy."""
+
+    name = "equal-split"
+
+    def route(self, spec: FunctionSpec, fn_rps: float, node: Node,
+              n_sat: float, total_sat: int) -> Tuple[float, float]:
+        """Returns (per_instance_rps, requests_routed_to_node)."""
+        return fn_rps / total_sat, fn_rps * (n_sat / total_sat)
 
 
 @dataclass
@@ -98,7 +119,8 @@ class Simulation:
                  scheduler: BaseScheduler, autoscaler: Autoscaler,
                  ground_truth: GroundTruth, store: ProfileStore,
                  qos: QoSStore, predictor: Optional[PerfPredictor] = None,
-                 cfg: Optional[SimConfig] = None):
+                 cfg: Optional[SimConfig] = None, *,
+                 router=None, events: Optional[EventHub] = None):
         self.specs = specs
         self.trace = trace
         self.scheduler = scheduler
@@ -108,21 +130,22 @@ class Simulation:
         self.qos = qos
         self.predictor = predictor
         self.cfg = cfg or SimConfig()
+        self.router = router or EqualSplitRouter()
+        self.events = events or EventHub()
         self.cluster = scheduler.cluster
         self._rng = np.random.default_rng(self.cfg.seed)
         if (self.cfg.use_capacity_engine and predictor is not None
-                and getattr(scheduler, "engine", None) is None
-                and hasattr(scheduler, "m_max")):
+                and scheduler.accepts_service
+                and scheduler.prediction_service is None):
             from .prediction_service import EngineConfig, PredictionService
-            scheduler.engine = PredictionService(
+            scheduler.attach_service(PredictionService(
                 predictor, store, qos, specs,
                 EngineConfig(m_max=scheduler.m_max,
                              retrain_every=self.cfg.retrain_every),
-                schema=self.cfg.schema_version)
+                schema=self.cfg.schema_version))
         # the shared service (Jiagu's solver or Gsight's feature/predict
         # client); the legacy per-node path has none
-        self._service = getattr(scheduler, "engine", None) or \
-            getattr(scheduler, "service", None)
+        self._service = scheduler.prediction_service
         if self._service is None and predictor is not None:
             if self.cfg.schema_version != 1:
                 raise ValueError(
@@ -167,6 +190,7 @@ class Simulation:
             res.node_seconds += nodes
             res.nodes_peak = max(res.nodes_peak, nodes)
             res.density_series.append(inst / nodes if nodes else 0.0)
+            self.events.on_tick(now, self)
         res.sched = self.scheduler.metrics
         res.scaling = self.autoscaler.metrics
         if self.predictor is not None:
@@ -203,11 +227,13 @@ class Simulation:
                 fn_rps = rps.get(fn, 0.0)
                 if fn_rps <= 1e-9:
                     continue
-                per_inst_rps = fn_rps / total_sat
+                # routing policy: how much of fn's traffic this node's
+                # instances serve (default: the paper's equal split)
+                per_inst_rps, reqs = self.router.route(
+                    spec, fn_rps, node, n_sat, total_sat)
                 load_frac = per_inst_rps / spec.saturated_rps
                 lat = self.gt.measure(spec, coloc, load_frac,
                                       node_res=node.res)
-                reqs = fn_rps * (n_sat / total_sat)  # routed to this node
                 res.requests += reqs
                 res.per_fn_requests[fn] = \
                     res.per_fn_requests.get(fn, 0.0) + reqs
@@ -264,7 +290,7 @@ class Simulation:
         if not Xs:
             return
         if svc is not None and self.cfg.online_retrain:
-            if svc.on_samples(Xs, ys) and hasattr(self.scheduler, "m_max"):
+            if svc.on_samples(Xs, ys) and self.scheduler.accepts_service:
                 # retrain fired: every table entry in the cluster was
                 # computed by the old forest — refresh them all in one
                 # coalesced drain, billed to the service's refresh

@@ -35,6 +35,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from .registry import Registry
+
 
 @dataclass
 class Trace:
@@ -322,6 +324,28 @@ def replay_trace(path, name: str | None = None,
                  out, T)
 
 
+# ---------------------------------------------------------------------------
+# Trace registry (the repro.platform name-based component selection)
+# ---------------------------------------------------------------------------
+
+_TRACES = Registry("trace")
+
+
+def register_trace(name: str, builder=None, *, overwrite: bool = False):
+    """Register a trace generator under ``name`` so benchmarks and
+    examples select it by string.  Usable as a decorator:
+    ``@register_trace("my-trace")``."""
+    return _TRACES.register(name, builder, overwrite=overwrite)
+
+
+def get_trace(name: str):
+    return _TRACES.get(name)
+
+
+def registered_traces() -> List[str]:
+    return _TRACES.names()
+
+
 def flip_trace(fns: List[str], duration_s: int = 600,
                period_s: int = 30, rps: float = 5.0) -> Trace:
     """Worst case (§7.2): each function's concurrency flips 0 <-> 1 so the
@@ -336,3 +360,15 @@ def flip_trace(fns: List[str], duration_s: int = 600,
             series[t] = rps * on
         out[fn] = series
     return Trace("flip", out, duration_s)
+
+
+for _name, _builder in (("realworld", realworld_trace),
+                        ("burst-storm", burst_storm_trace),
+                        ("diurnal-shift", diurnal_shift_trace),
+                        ("coldstart-churn", coldstart_churn_trace),
+                        ("azure-sparse", azure_sparse_trace),
+                        ("timer", timer_trace),
+                        ("flip", flip_trace),
+                        ("replay", replay_trace)):
+    register_trace(_name, _builder)
+del _name, _builder
