@@ -31,19 +31,32 @@ capacity solving vs the CapacityEngine — and end-to-end metrics
 from __future__ import annotations
 
 import argparse
+import contextlib
 import copy
+import os
 import time
 
 import numpy as np
 
-from .common import emit, save_artifact
+from .common import ARTIFACTS, emit, save_artifact
 
 from repro.core import scenario_world
-from repro.platform import Platform, PlatformConfig, scenario_from_config
+from repro.platform import (JsonlObserver, Platform, PlatformConfig,
+                            scenario_from_config)
 
 N_FUNCTIONS = 24
 STUDY_KINDS = ("burst-storm", "diurnal-shift", "coldstart-churn",
                "azure-sparse")
+#: density/QoS sweep systems: the no-overcommit baseline, the paper's
+#: scheduler, and the pipeline-native harvesting policy
+STUDY_SYSTEMS = ("k8s", "jiagu", "harvesting")
+#: legacy-vs-pipeline placement-parity pairs and the cluster size each
+#: is gated at (gsight is per-instance-inference bound, so its parity
+#: runs on a smaller fleet)
+PIPELINE_PAIRS = (("k8s", "k8s-pipeline", 256),
+                  ("owl", "owl-pipeline", 256),
+                  ("jiagu", "jiagu-pipeline", 256),
+                  ("gsight", "gsight-pipeline", 32))
 
 
 def study_spec(quick: bool = False, seed: int = 0) -> dict:
@@ -104,14 +117,19 @@ def _run_manifest(manifest: dict):
 def run_study(spec: dict):
     """The density/QoS/cost sweep, one manifest per run.  One function
     population and one trained predictor are shared by every scenario
-    (they differ only in trace program and cluster size)."""
+    (they differ only in trace program and cluster size).  Every run's
+    observer streams (ticks, scheduling decisions with their
+    ``DecisionTrace`` summaries, scaling transitions, retrains) are
+    persisted to ``artifacts/events/*.jsonl`` for cross-run
+    dashboards."""
     world = None
     rows = []
+    events_dir = spec.get("events_dir", os.path.join(ARTIFACTS, "events"))
     for kind in spec["kinds"]:
         for target in spec["sizes"]:
             scenario = None
             base = None
-            for system in ("k8s", "jiagu"):
+            for system in spec.get("systems", STUDY_SYSTEMS):
                 manifest = copy.deepcopy(spec["base"])
                 manifest["scenario"].update(kind=kind,
                                             target_nodes=target)
@@ -123,16 +141,29 @@ def run_study(spec: dict):
                     world = scenario_world(
                         scenario, n_train=cfg.prediction.n_train,
                         n_trees=cfg.prediction.n_trees)
-                t0 = time.perf_counter()
-                plat = Platform.build(scenario=scenario, config=cfg,
-                                      world=world)
-                res = plat.run()
+                obs = JsonlObserver(
+                    os.path.join(events_dir,
+                                 f"{kind}_{target}_{system}.jsonl"),
+                    tick_every=10,
+                    meta={"manifest": cfg.to_dict()}) \
+                    if events_dir else None
+                # the context manager closes (and flushes) the event
+                # artifact even when a run raises mid-sweep
+                with obs if obs is not None else contextlib.nullcontext():
+                    t0 = time.perf_counter()
+                    plat = Platform.build(scenario=scenario, config=cfg,
+                                          world=world,
+                                          observers=[obs] if obs else ())
+                    res = plat.run()
                 row = _result_row(kind, target, system, res,
                                   time.perf_counter() - t0)
                 if system == "k8s":
                     base = res.density
-                row["norm_density"] = round(res.density / max(base, 1e-9), 3)
-                if system == "jiagu" and plat.service is not None:
+                # no k8s arm in a custom systems list -> no normalization
+                row["norm_density"] = \
+                    round(res.density / max(base, 1e-9), 3) \
+                    if base is not None else ""
+                if plat.service is not None:
                     st = plat.service.stats
                     row["engine_predict_calls"] = st.predict_calls
                     row["engine_cache_hits"] = st.cache_hits
@@ -220,6 +251,140 @@ def ab_parity(kind: str = "burst-storm", duration: int = 180,
         raise RuntimeError("A/B parity: QoS violation rate diverged")
     record["parity"] = True
     return record
+
+
+# ---------------------------------------------------------------------------
+# Pipeline parity: legacy monolithic schedule() vs the decision pipeline
+# ---------------------------------------------------------------------------
+
+
+def _placement_state(plat) -> list:
+    """The cluster's final placement as a canonical comparable value."""
+    return sorted(
+        tuple(sorted((fn, s.n_sat, s.n_cached)
+                     for fn, s in node.funcs.items()))
+        for node in plat.cluster.nodes.values())
+
+
+def _parity_arm(system: str, kind: str, duration: int, target_nodes: int,
+                n_functions: int, seed: int):
+    manifest = {
+        "scenario": {"kind": kind, "n_functions": n_functions,
+                     "duration_s": duration,
+                     "target_nodes": target_nodes, "seed": seed},
+        "scheduler": {"name": system},
+        "prediction": {"n_train": 1000, "n_trees": 16},
+    }
+    plat, res = _run_manifest(manifest)
+    return plat, res
+
+
+def pipeline_parity(kind: str = "burst-storm", duration: int = 120,
+                    n_functions: int = 12, seed: int = 0,
+                    pairs=PIPELINE_PAIRS) -> dict:
+    """The decision-pipeline re-expression gate: each legacy scheduler
+    and its pipeline stack run the same full trace from identical world
+    state; placements (final per-node instance layout), density, QoS,
+    and every scheduling/scaling counter must be identical.  Raises on
+    any divergence — this is what lets future policies build on the
+    pipeline stages without re-validating the baselines."""
+    rows = []
+    for legacy_name, pipeline_name, target_nodes in pairs:
+        arms = {}
+        for system in (legacy_name, pipeline_name):
+            t0 = time.perf_counter()
+            plat, res = _parity_arm(system, kind, duration, target_nodes,
+                                    n_functions, seed)
+            s, a = res.sched, res.scaling
+            arms[system] = {
+                "density": res.density,
+                "qos_violation": res.qos_violation_rate,
+                "requests": res.requests,
+                "nodes_peak": res.nodes_peak,
+                "counters": (s.decisions, s.fast, s.slow,
+                             s.instances_placed, s.failed,
+                             a.real_cold_starts, a.logical_cold_starts,
+                             a.releases, a.evictions, a.migrations),
+                "placement": _placement_state(plat),
+                "wall_s": round(time.perf_counter() - t0, 1),
+            }
+        legacy, pipe = arms[legacy_name], arms[pipeline_name]
+        # explicit raises, not asserts: the gate must fire under -O too
+        for key in ("density", "qos_violation", "requests",
+                    "nodes_peak", "counters", "placement"):
+            if legacy[key] != pipe[key]:
+                raise RuntimeError(
+                    f"pipeline parity: {legacy_name} vs {pipeline_name} "
+                    f"diverged on {key}"
+                    + ("" if key == "placement" else
+                       f" ({legacy[key]} vs {pipe[key]})"))
+        rows.append({
+            "pair": f"{legacy_name}/{pipeline_name}",
+            "target_nodes": target_nodes,
+            "density": round(legacy["density"], 3),
+            "qos_violation": round(legacy["qos_violation"], 4),
+            "decisions": legacy["counters"][0],
+            "placed": legacy["counters"][3],
+            "wall_legacy_s": legacy["wall_s"],
+            "wall_pipeline_s": pipe["wall_s"],
+            "parity": True,
+        })
+        print(f"# pipeline-parity {legacy_name}@{target_nodes}: "
+              f"density={rows[-1]['density']} "
+              f"placed={rows[-1]['placed']} => identical", flush=True)
+    emit(rows)
+    return {"kind": kind, "duration_s": duration,
+            "n_functions": n_functions, "rows": rows}
+
+
+# ---------------------------------------------------------------------------
+# Router A/B: equal split vs the locality/affinity router
+# ---------------------------------------------------------------------------
+
+
+def router_ab(kind: str = "burst-storm", duration: int = 180,
+              target_nodes: int = 128, n_functions: int = 16,
+              seed: int = 0) -> dict:
+    """A/B the registered routers on the same scenario: the paper's
+    equal split vs the ``locality`` router (traffic prefers a
+    function's least-contended placements, spilling by score).  Both
+    arms build from scratch so they face identical world state; the
+    routing policy is the only difference."""
+    rows = []
+    raw_requests = []
+    for router in ("equal-split", "locality"):
+        manifest = {
+            "scenario": {"kind": kind, "n_functions": n_functions,
+                         "duration_s": duration,
+                         "target_nodes": target_nodes, "seed": seed},
+            "scheduler": {"name": "jiagu"},
+            "prediction": {"n_train": 1000, "n_trees": 16},
+            "simulation": {"router": router},
+        }
+        t0 = time.perf_counter()
+        _plat, res = _run_manifest(manifest)
+        raw_requests.append(res.requests)
+        rows.append({
+            "router": router, "target_nodes": target_nodes,
+            "density": round(res.density, 3),
+            "qos_violation": round(res.qos_violation_rate, 4),
+            "requests": round(res.requests, 1),
+            "real_cold_starts": res.scaling.real_cold_starts,
+            "wall_s": round(time.perf_counter() - t0, 1),
+        })
+        print(f"# router-ab {router}: density={rows[-1]['density']} "
+              f"qos={rows[-1]['qos_violation']} "
+              f"({rows[-1]['wall_s']}s)", flush=True)
+    emit(rows)
+    eq_reqs, loc_reqs = raw_requests       # unrounded: the row values
+    #                                        are display-rounded
+    if abs(eq_reqs - loc_reqs) > 1e-6 * eq_reqs:
+        raise RuntimeError(
+            f"router-ab: routed request totals diverged "
+            f"({eq_reqs} vs {loc_reqs}) — the locality router must "
+            f"conserve traffic")
+    return {"kind": kind, "duration_s": duration,
+            "target_nodes": target_nodes, "rows": rows}
 
 
 # ---------------------------------------------------------------------------
@@ -341,17 +506,26 @@ def run(quick: bool = False, seed: int = 0, spec: dict = None):
     print(f"# parity: tables_equal={parity['tables_equal']} "
           f"density={parity['engine']['density']:.3f} "
           f"qos={parity['engine']['qos_violation']:.4f} => PASS")
-    bad_qos = [r for r in rows if r["system"] == "jiagu"
+    print("\n# pipeline parity (legacy schedule() vs decision pipeline)")
+    pipe_parity = pipeline_parity(duration=60 if quick else 150,
+                                  seed=spec["seed"])
+    print("# pipeline-parity: 4/4 stacks identical => PASS")
+    print("\n# router A/B (equal split vs locality)")
+    routers = router_ab(duration=120 if quick else 300,
+                        target_nodes=64 if quick else 128,
+                        seed=spec["seed"])
+    bad_qos = [r for r in rows if r["system"] in ("jiagu", "harvesting")
                and r["qos_violation"] >= 0.10]
     if bad_qos:
-        print(f"# WARNING: {len(bad_qos)} jiagu rows at/above the 10% "
-              f"QoS bar: "
+        print(f"# WARNING: {len(bad_qos)} prediction-backed rows "
+              f"at/above the 10% QoS bar: "
               + ", ".join(f"{r['scenario']}@{r['target_nodes']}"
-                          for r in bad_qos))
+                          f"/{r['system']}" for r in bad_qos))
     record = {"sizes": spec["sizes"], "kinds": list(spec["kinds"]),
               "base_manifest": spec["base"],
               "n_functions": N_FUNCTIONS, "rows": rows,
-              "ab_parity": parity}
+              "ab_parity": parity, "pipeline_parity": pipe_parity,
+              "router_ab": routers}
     save_artifact("large_cluster", record)
     return record
 

@@ -41,7 +41,10 @@ def main() -> None:
         ("capacity_engine", lambda: capacity_engine.run(quick=args.quick)),
         # the large-cluster study is driven through repro.platform
         # manifests: one PlatformConfig.from_dict-validated dict per
-        # (scenario, size, system) run, derived from this spec
+        # (scenario, size, system) run, derived from this spec; each
+        # run's observer streams (ticks / schedule decisions with
+        # DecisionTrace summaries / scaling / retrains) land in
+        # artifacts/events/*.jsonl for cross-run dashboards
         ("large_cluster", lambda: large_cluster.run(
             quick=args.quick,
             spec=large_cluster.study_spec(quick=args.quick))),

@@ -7,9 +7,13 @@
 #                                engine-default A/B gate end to end) +
 #                                the 256-node online-retraining / schema
 #                                v1-vs-v2 gate
-# The platform smoke step builds every registered scheduler against one
-# scenario from pure PlatformConfig manifest dicts and runs 30 ticks
-# (python -m repro.platform).
+# The platform smoke step builds every registered scheduler — the four
+# legacy ones, their pipeline-stack re-expressions, and the harvesting
+# scheduler — against one scenario from pure PlatformConfig manifest
+# dicts, runs 30 ticks each, and gates harvesting's QoS violation rate
+# against the K8s baseline (python -m repro.platform).  The pipeline
+# placement-parity gate runs in tier-1 (tests/test_pipeline.py) and at
+# 256 nodes inside the quick large-cluster benchmark (--full).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

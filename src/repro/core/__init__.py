@@ -5,8 +5,14 @@ from .autoscaler import (Autoscaler, ScalingConfig, ScalingMetrics,
                          SchedulerCapacityProvider)
 from .capacity import QOS_MULT, QoSStore, capacity_of, update_capacity_table
 from .cluster import CapEntry, Cluster, FuncState, Node
-from .events import EventHub, Observer
+from .events import EventHub, JsonlObserver, Observer
+from .harvesting import HarvestingScheduler
 from .interference import GroundTruth, NodeResources
+from .pipeline import (CandidatePass, DecisionContext, DecisionTrace,
+                       PipelineGsightScheduler, PipelineHostMixin,
+                       PipelineJiaguScheduler, PipelineK8sScheduler,
+                       PipelineOwlScheduler, SchedulingPipeline,
+                       TraceBinding)
 from .metrics import Reservoir
 from .prediction_service import (SCHEMA_V1, SCHEMA_V2, CapacityEngine,
                                  EngineConfig, EngineStats, FeatureSchema,
@@ -29,8 +35,8 @@ from .scenarios import (LARGE_NODE, SCENARIO_KINDS, STANDARD_NODE,
                         registered_scenarios, scale_trace_to_nodes,
                         scenario_functions, scenario_simulation,
                         scenario_suite, scenario_world, zipf_weights)
-from .simulator import (EqualSplitRouter, SimConfig, SimResult,
-                        Simulation, generate_dataset)
+from .simulator import (EqualSplitRouter, LocalityRouter, SimConfig,
+                        SimResult, Simulation, generate_dataset)
 from .traces import (Trace, azure_sparse_trace, burst_storm_trace,
                      coldstart_churn_trace, diurnal_shift_trace, flip_trace,
                      get_trace, realworld_suite, realworld_trace,
@@ -54,6 +60,11 @@ __all__ = [
     "synthetic_functions", "FAST_PATH_MS", "REROUTE_MS", "BaseScheduler",
     "GsightScheduler", "JiaguScheduler", "K8sScheduler", "OwlScheduler",
     "SimConfig", "SimResult", "Simulation", "generate_dataset", "Trace",
+    "JsonlObserver", "LocalityRouter", "HarvestingScheduler",
+    "CandidatePass", "DecisionContext", "DecisionTrace", "TraceBinding",
+    "SchedulingPipeline", "PipelineHostMixin", "PipelineJiaguScheduler",
+    "PipelineGsightScheduler", "PipelineK8sScheduler",
+    "PipelineOwlScheduler",
     "flip_trace", "realworld_suite", "realworld_trace", "timer_trace",
     "burst_storm_trace", "diurnal_shift_trace", "coldstart_churn_trace",
     "azure_sparse_trace", "NodeClass", "Scenario", "ScenarioWorld",

@@ -169,6 +169,29 @@ class Autoscaler:
 
     # ------------------------------------------------------------------
 
+    def note_release(self, fn: str, node: Node, k: int, now: float
+                     ) -> bool:
+        """Account a *scheduler-initiated* release (e.g. harvesting's
+        QoS-breach give-back, performed via ``node.release``): the
+        released instances enter the same keep-alive ledger as the
+        autoscaler's own releases, so they are keep-alive-evicted,
+        migrated, and counted (``metrics.releases`` / ``on_scale``)
+        exactly like any other cached instance.
+
+        Returns False without accounting when this autoscaler runs
+        traditional keep-alive (``dual_staged=False``): its ledger
+        sweep never fires there, so accepting the entry would park the
+        instances as permanently-cached — the caller must keep-alive
+        them itself."""
+        if not self.cfg.dual_staged:
+            return False
+        if k <= 0:
+            return True
+        self._ledger.push(fn, now, node.id, k)
+        self.metrics.releases += k
+        self.events.on_scale(now, fn, "release", k)
+        return True
+
     def expected_instances(self, fn: str, rps: float) -> int:
         spec = self.cluster.specs[fn]
         if rps <= 1e-9:
@@ -210,7 +233,10 @@ class Autoscaler:
             for p in placements:
                 self.metrics.cold_start_ms.extend(
                     [p.latency_ms + self.cfg.init_ms] * p.count)
-            self.events.on_schedule(now, fn, placements)
+            # pipeline schedulers attach a DecisionTrace explaining the
+            # placement; legacy monolithic schedulers yield None
+            self.events.on_schedule(now, fn, placements,
+                                    self.scheduler.take_trace())
             if placed:
                 self.events.on_scale(now, fn, "real_cold_start", placed)
 

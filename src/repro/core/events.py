@@ -8,8 +8,10 @@ without the run loop knowing who is listening:
 
   * ``on_tick(now, sim)``        — once per simulated second, after
     autoscaling/routing/measurement for that second completed,
-  * ``on_schedule(now, fn, placements)`` — a scheduler decision placed
-    real (cold-started) instances,
+  * ``on_schedule(now, fn, placements, trace)`` — a scheduler decision
+    placed real (cold-started) instances; ``trace`` is the pipeline's
+    ``DecisionTrace`` explaining the placement (None for legacy
+    monolithic schedulers),
   * ``on_scale(now, fn, event, count)``  — an autoscaler state
     transition: ``"logical_start"``, ``"real_cold_start"``,
     ``"release"``, ``"evict"``, or ``"migrate"``,
@@ -19,11 +21,14 @@ without the run loop knowing who is listening:
 ``EventHub`` fans one event out to every registered observer; the hub
 with no observers is the default everywhere and costs one empty-list
 iteration per event, so the instrumented and bare runs are the same
-code path (parity gates depend on that).
+code path (parity gates depend on that).  ``JsonlObserver`` persists
+the streams to ``artifacts/*.jsonl`` for cross-run dashboards.
 """
 from __future__ import annotations
 
-from typing import Iterable, List
+import json
+import os
+from typing import Iterable, List, Optional
 
 
 class Observer:
@@ -37,7 +42,8 @@ class Observer:
     def on_tick(self, now: float, sim) -> None:
         pass
 
-    def on_schedule(self, now: float, fn: str, placements) -> None:
+    def on_schedule(self, now: float, fn: str, placements,
+                    trace=None) -> None:
         pass
 
     def on_scale(self, now: float, fn: str, event: str,
@@ -72,9 +78,10 @@ class EventHub(Observer):
         for o in self.observers:
             o.on_tick(now, sim)
 
-    def on_schedule(self, now: float, fn: str, placements) -> None:
+    def on_schedule(self, now: float, fn: str, placements,
+                    trace=None) -> None:
         for o in self.observers:
-            o.on_schedule(now, fn, placements)
+            o.on_schedule(now, fn, placements, trace)
 
     def on_scale(self, now: float, fn: str, event: str,
                  count: int) -> None:
@@ -84,3 +91,85 @@ class EventHub(Observer):
     def on_retrain(self, service) -> None:
         for o in self.observers:
             o.on_retrain(service)
+
+
+class JsonlObserver(Observer):
+    """Persist the observer streams to a JSONL artifact, one event per
+    line, for cross-run dashboards:
+
+      {"event": "tick", "now": ..., "nodes": ..., "instances": ...,
+       "density": ...}
+      {"event": "schedule", "fn": ..., "placed": ..., "trace": {...}}
+      {"event": "scale", "fn": ..., "kind": "release", "count": ...}
+      {"event": "retrain", "epoch": ..., "retrains": ...}
+
+    ``tick_every`` subsamples the per-tick stream (schedule/scale/
+    retrain events are always complete); ``trace.summary()`` — the
+    compact ``DecisionTrace`` form — rides every schedule event, so a
+    dashboard can reconstruct why each placement happened.  Usable as a
+    context manager; the file is opened lazily on the first event."""
+
+    def __init__(self, path: str, tick_every: int = 1,
+                 meta: Optional[dict] = None):
+        self.path = path
+        self.tick_every = max(int(tick_every), 1)
+        self.meta = meta
+        self.events = 0
+        self._fh = None
+
+    # -- plumbing ---------------------------------------------------------
+
+    def _write(self, record: dict) -> None:
+        if self._fh is None:
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._fh = open(self.path, "w")
+            if self.meta:
+                self._fh.write(json.dumps(
+                    {"event": "meta", **self.meta}) + "\n")
+        self._fh.write(json.dumps(record) + "\n")
+        self.events += 1
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "JsonlObserver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- hooks ------------------------------------------------------------
+
+    def on_tick(self, now: float, sim) -> None:
+        if int(now) % self.tick_every:
+            return
+        nodes = len(sim.cluster.nodes)
+        inst = sim.cluster.total_instances()
+        self._write({"event": "tick", "now": now, "nodes": nodes,
+                     "instances": inst,
+                     "density": inst / nodes if nodes else 0.0})
+
+    def on_schedule(self, now: float, fn: str, placements,
+                    trace=None) -> None:
+        rec = {"event": "schedule", "now": now, "fn": fn,
+               "placed": sum(p.count for p in placements),
+               "placements": [[p.node_id, p.count,
+                               round(p.latency_ms, 4)]
+                              for p in placements]}
+        if trace is not None:
+            rec["trace"] = trace.summary()
+        self._write(rec)
+
+    def on_scale(self, now: float, fn: str, event: str,
+                 count: int) -> None:
+        self._write({"event": "scale", "now": now, "fn": fn,
+                     "kind": event, "count": count})
+
+    def on_retrain(self, service) -> None:
+        self._write({"event": "retrain", "epoch": service.epoch,
+                     "retrains": service.stats.retrains,
+                     "samples": service.predictor.n_samples})

@@ -70,6 +70,13 @@ class GroundTruth:
         self.node = node or NodeResources()
         self._rng = np.random.default_rng(seed)
 
+    def reseed(self, seed: int = 1234) -> None:
+        """Reset the measurement-noise stream.  A/B consumers that share
+        one world across sequential runs (the platform smoke) call this
+        so every arm faces the identical noise, instead of run-order-
+        dependent draws."""
+        self._rng = np.random.default_rng(seed)
+
     # -- node-level pressures ------------------------------------------
 
     def _pressures(self, colocation: Mapping[str, Tuple[FunctionSpec, float,

@@ -40,7 +40,7 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional,
 
 from .capacity import M_MAX_DEFAULT
 from .cluster import Cluster, Node
-from .events import EventHub, Observer
+from .events import EventHub, JsonlObserver, Observer
 from .interference import NodeResources
 from .prediction_service import INFERENCE_ENGINES, get_schema
 from .profiles import FunctionSpec
@@ -53,8 +53,19 @@ from .scenarios import (NodeClass, Scenario, ScenarioWorld,
                         get_scenario_builder, make_scenario,
                         register_scenario, registered_scenarios,
                         scenario_simulation, scenario_world)
-from .simulator import EqualSplitRouter, SimResult, Simulation
+from .simulator import (EqualSplitRouter, LocalityRouter, SimResult,
+                        Simulation)
 from .traces import get_trace, register_trace, registered_traces
+# importing these modules registers the pipeline-stacked scheduler
+# variants and the harvesting scheduler with the scheduler registry
+from .pipeline import (Binder, CandidatePass, DecisionContext,
+                       DecisionTrace, GreedyLogicalStartPicker,
+                       GreedyReleasePicker, NodeFilter, NodeScorer,
+                       PipelineHostMixin, PreDecision,
+                       SchedulingPipeline, TableBoundLogicalStartPicker,
+                       TraceBinding)
+from .pipeline import BreachAwareReleasePicker
+from .harvesting import CooldownLogicalStartPicker, HarvestingScheduler
 
 
 class PlatformConfigError(ValueError):
@@ -137,6 +148,52 @@ def registered_routers() -> List[str]:
 
 
 register_router("equal-split", EqualSplitRouter)
+register_router("locality", LocalityRouter)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-stage registry (release / logical-start picker policies and
+# any custom filter/scorer/binder a plugin wants selectable by name)
+# ---------------------------------------------------------------------------
+
+_STAGES = Registry("pipeline stage")
+
+
+def _stage_key(kind: str, name: str) -> str:
+    return f"{kind}:{name}"
+
+
+def register_stage(kind: str, name: str, factory=None, *,
+                   overwrite: bool = False):
+    """Register a pipeline-stage factory under ``(kind, name)``.
+
+    ``kind`` groups stages by protocol ("release", "logical-start",
+    "filter", "scorer", "binder", ...); factories take the owning
+    scheduler and return the stage object, so config manifests can
+    select picker policies by string (``PlatformConfig.pipeline``)."""
+    return _STAGES.register(_stage_key(kind, name), factory,
+                            overwrite=overwrite)
+
+
+def get_stage(kind: str, name: str):
+    return _STAGES.get(_stage_key(kind, name))
+
+
+def registered_stages(kind: Optional[str] = None) -> List[str]:
+    names = _STAGES.names()
+    if kind is None:
+        return names
+    prefix = f"{kind}:"
+    return [n[len(prefix):] for n in names if n.startswith(prefix)]
+
+
+register_stage("release", "greedy", GreedyReleasePicker)
+register_stage("release", "breach-aware", BreachAwareReleasePicker)
+register_stage("logical-start", "greedy", GreedyLogicalStartPicker)
+register_stage("logical-start", "table-bound",
+               TableBoundLogicalStartPicker)
+register_stage("logical-start", "cooldown-table-bound",
+               CooldownLogicalStartPicker)
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +258,12 @@ class SchedulerSection:
     name: str = "jiagu"
     m_max: int = M_MAX_DEFAULT
     max_candidates: int = 4      # gsight-style candidate fan-out
+    #: harvesting: fraction of predicted capacity claimable (1.0 =
+    #: exactly the predicted bound; >1 deliberate overcommit)
+    harvest_headroom: float = 0.85
+    #: harvesting: seconds a QoS-breached node is exempt from
+    #: harvesting / re-saturation after its release
+    qos_release_cooldown_s: float = 30.0
 
 
 @dataclass
@@ -226,6 +289,26 @@ class PredictionSection:
     engine: Optional[str] = None
     online_retrain: bool = False
     retrain_every: Optional[int] = None
+    #: schema v2: learn the per-shape QoS margin from per-shape
+    #: validation error instead of the fixed shape_margin formula
+    learned_shape_margin: bool = False
+
+
+@dataclass
+class PipelineSection:
+    """Decision-pipeline knobs: trace recording and named stage
+    overrides for the dual-staged scaling picks (resolved through the
+    ``register_stage`` registry, applied to whatever scheduler the
+    manifest selects).
+
+    ``decision_traces=None`` (default) records traces only when the
+    platform is built with observers — traces exist to be consumed
+    through ``on_schedule``, and observer-less runs shouldn't pay the
+    bookkeeping; an explicit bool forces recording on or off."""
+
+    decision_traces: Optional[bool] = None
+    release_picker: Optional[str] = None       # stage registry name
+    logical_start_picker: Optional[str] = None  # stage registry name
 
 
 @dataclass
@@ -245,6 +328,7 @@ _SECTIONS = {
     "scheduler": SchedulerSection,
     "scaling": ScalingSection,
     "prediction": PredictionSection,
+    "pipeline": PipelineSection,
     "simulation": SimulationSection,
 }
 
@@ -287,6 +371,7 @@ class PlatformConfig:
     scheduler: SchedulerSection = field(default_factory=SchedulerSection)
     scaling: ScalingSection = field(default_factory=ScalingSection)
     prediction: PredictionSection = field(default_factory=PredictionSection)
+    pipeline: PipelineSection = field(default_factory=PipelineSection)
     simulation: SimulationSection = field(default_factory=SimulationSection)
 
     # -- (de)serialization ------------------------------------------------
@@ -329,6 +414,22 @@ class PlatformConfig:
         get_scenario_builder(sc.kind)                  # unknown -> raises
         get_router(sim.router)                         # unknown -> raises
         get_schema(p.schema_version)                   # unknown -> raises
+        if self.pipeline.release_picker is not None:
+            get_stage("release", self.pipeline.release_picker)
+        if self.pipeline.logical_start_picker is not None:
+            get_stage("logical-start", self.pipeline.logical_start_picker)
+        if p.learned_shape_margin and p.schema_version == 1:
+            raise PlatformConfigError(
+                "prediction.learned_shape_margin needs the node-shape-"
+                "aware feature schema (schema_version >= 2); v1 rows "
+                "carry no shape block to learn margins from")
+        if self.scheduler.harvest_headroom <= 0:
+            raise PlatformConfigError(
+                "scheduler.harvest_headroom must be positive (fraction "
+                "of predicted capacity claimable; 1.0 = the full bound)")
+        if self.scheduler.qos_release_cooldown_s < 0:
+            raise PlatformConfigError(
+                "scheduler.qos_release_cooldown_s must be >= 0")
         if sc.n_functions <= 0 or sc.duration_s <= 0 \
                 or sc.target_nodes <= 0:
             raise PlatformConfigError(
@@ -494,12 +595,26 @@ class Platform:
             max_nodes=cfg.cluster.max_nodes,
             dual_staged=cfg.scaling.dual_staged,
             router=router or get_router(sim_cfg.router)(),
+            learned_shape_margin=p.learned_shape_margin,
+            harvest_headroom=cfg.scheduler.harvest_headroom,
+            qos_release_cooldown_s=cfg.scheduler.qos_release_cooldown_s,
             events=hub)
         service = simulation.scheduler.prediction_service
         if service is not None:
             if p.engine is not None:
                 service.set_engine(p.engine)
             service.add_retrain_listener(hub.on_retrain)
+        # pipeline section: trace toggle + named picker-stage overrides
+        sched = simulation.scheduler
+        pl = cfg.pipeline
+        sched.trace_decisions = pl.decision_traces \
+            if pl.decision_traces is not None else bool(hub.observers)
+        if pl.release_picker is not None:
+            sched.release_stage = \
+                get_stage("release", pl.release_picker)(sched)
+        if pl.logical_start_picker is not None:
+            sched.logical_start_stage = \
+                get_stage("logical-start", pl.logical_start_picker)(sched)
         return cls(cfg, scenario, world, simulation, hub)
 
 
@@ -530,6 +645,12 @@ def smoke(duration_s: int = 30, verbose: bool = True
         plat = Platform.build(scenario=scenario, config=manifest,
                               world=world)
         scenario, world = plat.scenario, plat.world
+        # every scheduler faces the identical measurement-noise stream
+        # (the shared world's ground truth draws from a stateful RNG;
+        # without the reset, results would depend on run order and the
+        # harvesting-vs-k8s QoS gate below would compare different
+        # noise)
+        world.gt.reseed()
         res = plat.run()
         if res.ticks != duration_s:
             raise RuntimeError(
@@ -540,6 +661,15 @@ def smoke(duration_s: int = 30, verbose: bool = True
             print(f"# platform-smoke {name}: density={res.density:.2f} "
                   f"qos={res.qos_violation_rate:.4f} "
                   f"peak_nodes={res.nodes_peak}", flush=True)
+    # harvesting gate: claiming idle headroom must not regress QoS
+    # versus the no-overcommit K8s baseline on the burst-storm scenario
+    harv, k8s = results.get("harvesting"), results.get("k8s")
+    if harv is not None and k8s is not None \
+            and harv.qos_violation_rate > k8s.qos_violation_rate + 1e-9:
+        raise RuntimeError(
+            f"platform smoke: harvesting QoS violation rate "
+            f"{harv.qos_violation_rate:.4f} regressed versus the K8s "
+            f"baseline's {k8s.qos_violation_rate:.4f}")
     if verbose:
         print(f"# platform-smoke: {len(results)} schedulers x 1 scenario "
               f"x {duration_s} ticks => PASS")
@@ -550,20 +680,29 @@ __all__ = [
     # facade + config
     "Platform", "PlatformConfig", "PlatformConfigError",
     "ClusterSection", "ScenarioSection", "SchedulerSection",
-    "ScalingSection", "PredictionSection", "SimulationSection",
-    "NodeClassConfig",
+    "ScalingSection", "PredictionSection", "PipelineSection",
+    "SimulationSection", "NodeClassConfig",
     # capability protocols
     "CapacityProvider", "ReleasePicker", "LogicalStartPicker", "Router",
+    # decision pipeline
+    "NodeFilter", "NodeScorer", "Binder", "PreDecision",
+    "DecisionContext", "DecisionTrace", "TraceBinding",
+    "CandidatePass", "SchedulingPipeline", "PipelineHostMixin",
+    "HarvestingScheduler",
     # observers
-    "Observer", "EventHub",
+    "Observer", "EventHub", "JsonlObserver",
     # registries
     "register_scheduler", "registered_schedulers", "scheduler_entry",
     "build_scheduler", "SchedulerEntry", "SchedulerBuildContext",
     "register_scenario", "registered_scenarios", "get_scenario_builder",
     "register_trace", "registered_traces", "get_trace",
     "register_router", "registered_routers", "get_router",
+    "register_stage", "registered_stages", "get_stage",
     # defaults + helpers
-    "EqualSplitRouter", "scenario_from_config",
+    "EqualSplitRouter", "LocalityRouter", "scenario_from_config",
+    "GreedyReleasePicker", "GreedyLogicalStartPicker",
+    "TableBoundLogicalStartPicker", "BreachAwareReleasePicker",
+    "CooldownLogicalStartPicker",
     # smoke
     "smoke",
 ]

@@ -51,7 +51,8 @@ import numpy as np
 from .capacity import M_MAX_DEFAULT, QoSStore
 from .cluster import CapEntry, Node
 from .interference import NodeResources
-from .predictor import N_FEATURES, PerfPredictor, build_features
+from .predictor import (N_FEATURES, PerfPredictor,
+                        RandomForestRegressor, build_features)
 from .profiles import N_PROFILE, FunctionSpec, ProfileStore
 
 # v1 feature layout (see predictor.build_features)
@@ -222,6 +223,14 @@ class EngineConfig:
     # (profiling data is densest at the reference shape).  0 disables.
     qos_margin_base: float = 0.06
     shape_margin: float = 0.08
+    # learn the per-shape margin from per-shape validation error over
+    # the accumulated dataset instead of the fixed shape_margin/unit
+    # formula (schema v2 only; recomputed every forest epoch; shapes
+    # with no validation rows fall back to the fixed formula)
+    learned_shape_margin: bool = False
+    margin_quantile: float = 0.9   # validation-error quantile per shape
+    margin_cap: float = 0.5        # learned margins are clamped to
+    #                                [qos_margin_base, margin_cap]
 
 
 @dataclass
@@ -414,6 +423,13 @@ class PredictionService:
         self._epoch = predictor.retrain_count
         self._pending_samples = 0
         self._retrain_listeners: List = []
+        # learned per-shape QoS margins (shape_key -> margin); cached
+        # per forest epoch when cfg.learned_shape_margin.  Learned
+        # eagerly here and after each retrain so the probe-forest fit
+        # never lands on a scheduling critical path.
+        self._shape_margins: Optional[Dict[Tuple[float, ...], float]] = None
+        if self.cfg.learned_shape_margin and predictor.fitted:
+            self.shape_margins()
 
     # -- inference engine selection --------------------------------------
 
@@ -492,6 +508,7 @@ class PredictionService:
         state the signatures cannot see has changed)."""
         if self._cache:
             self._cache.clear()
+        self._shape_margins = None   # re-learn against the new forest
         self.stats.cache_epochs += 1
 
     def signature(self, coloc: Coloc, fn: str,
@@ -517,12 +534,77 @@ class PredictionService:
             return None
         return cap
 
+    def shape_margins(self) -> Dict[Tuple[float, ...], float]:
+        """Per-shape QoS margins learned from per-shape *validation*
+        error (``cfg.learned_shape_margin``).
+
+        A deterministic 1-in-4 holdout of the accumulated dataset is
+        scored against a **probe forest** fit on the remaining rows
+        (same hyperparameters as the serving forest) — the serving
+        forest trains on everything, so scoring the holdout with it
+        would report biased-low in-sample residuals and hand poorly-
+        extrapolated shapes margins that are too tight.  Holdout rows
+        are grouped by their quantized shape block (the same keys the
+        signature cache uses) and each shape's margin is the
+        ``margin_quantile`` of its relative error, clamped to
+        [qos_margin_base, margin_cap].  Called eagerly on construction
+        and after every ``retrain()`` — the probe fit is background
+        work, billed with retraining; ``qos_bound_scale`` only ever
+        *reads* the cached result (after an external ``invalidate``
+        the fixed formula applies until the next retrain re-learns),
+        so the fit can never land on a scheduling critical path."""
+        if self._shape_margins is not None:
+            return self._shape_margins
+        margins: Dict[Tuple[float, ...], float] = {}
+        X, y = self.predictor.dataset()
+        if self.schema.version >= 2 and len(y) >= 8 \
+                and X.shape[1] == self.schema.n_features:
+            idx = np.arange(len(y))
+            val = idx[3::4]              # deterministic 1-in-4 holdout
+            train = np.setdiff1d(idx, val)
+            Xv, yv = X[val], y[val]
+            model = self.predictor.model
+            probe = RandomForestRegressor(
+                model.n_trees, model.max_depth,
+                model.min_samples_leaf, seed=model.seed + 1)
+            yt = y[train]
+            if self.predictor.log_target:
+                yt = np.log(np.maximum(yt, 1e-6))
+            probe.fit(X[train], yt)
+            pred = probe.predict(Xv)
+            if self.predictor.log_target:
+                pred = np.exp(pred)
+            rel = np.abs(pred - yv) / np.maximum(yv, 1e-9)
+            q = max(self.cfg.quant, 1e-9)
+            keys = [tuple(round(float(v) * q) / q for v in row)
+                    for row in Xv[:, N_FEATURES:]]
+            groups: Dict[Tuple[float, ...], List[float]] = {}
+            for key, err in zip(keys, rel):
+                groups.setdefault(key, []).append(float(err))
+            for key, errs in groups.items():
+                m = float(np.quantile(np.asarray(errs),
+                                      self.cfg.margin_quantile))
+                margins[key] = min(max(m, self.cfg.qos_margin_base),
+                                   self.cfg.margin_cap)
+        self._shape_margins = margins
+        return margins
+
     def qos_bound_scale(self, node_res: Optional[NodeResources] = None
                         ) -> float:
         """Schema-v2 QoS tightening (1.0 under v1 — the parity paths
-        are untouched): flat base margin + shape-extrapolation term."""
+        are untouched): flat base margin + shape-extrapolation term,
+        or — with ``cfg.learned_shape_margin`` — the margin learned
+        from that shape's validation error (fixed formula as the
+        fallback for shapes with no validation rows)."""
         if self.schema.version == 1:
             return 1.0
+        # cached margins only: a lazy recompute here would put the
+        # probe-forest fit inside a scheduling-latency timing window
+        if self.cfg.learned_shape_margin and self._shape_margins:
+            learned = self._shape_margins.get(
+                self.schema.shape_key(node_res, self.cfg.quant))
+            if learned is not None:
+                return 1.0 / (1.0 + learned)
         margin = self.cfg.qos_margin_base
         if node_res is not None and self.cfg.shape_margin:
             r = node_res.cpu_mcores / REFERENCE_NODE.cpu_mcores
@@ -675,10 +757,15 @@ class PredictionService:
         critical path)."""
         t0 = time.perf_counter()
         self.predictor.retrain()
+        self._check_epoch()     # epoch bump -> invalidate()
+        if self.cfg.learned_shape_margin:
+            # re-learn margins against the new forest now (background,
+            # billed with the retrain) rather than lazily on the next
+            # capacity solve
+            self.shape_margins()
         self.stats.retrain_time_s += time.perf_counter() - t0
         self.stats.retrains += 1
         self._pending_samples = 0
-        self._check_epoch()     # epoch bump -> invalidate()
         for cb in self._retrain_listeners:
             cb(self)
 

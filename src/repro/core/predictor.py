@@ -256,6 +256,15 @@ class PerfPredictor:
     def n_samples(self) -> int:
         return len(self._y)
 
+    def dataset(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The accumulated training set as (X, y) arrays (empty arrays
+        before any sample) — validation consumers (the service's
+        learned shape margins) read it without touching internals."""
+        if not self._y:
+            return (np.empty((0, 0), np.float32),
+                    np.empty(0, np.float64))
+        return np.stack(self._X), np.asarray(self._y, np.float64)
+
     def add_sample(self, x: np.ndarray, y: float, retrain: bool = True):
         self._X.append(np.asarray(x, np.float32))
         self._y.append(float(y))

@@ -374,6 +374,9 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
                      max_candidates: int = 4,
                      sim_seed: int = 0,
                      router=None,
+                     learned_shape_margin: bool = False,
+                     harvest_headroom: float = 0.85,
+                     qos_release_cooldown_s: float = 30.0,
                      events: Optional[EventHub] = None) -> Simulation:
     """The one scheduler-dispatch/autoscaler/SimConfig assembly, shared
     by ``scenario_simulation``, ``platform.Platform.build`` and
@@ -398,17 +401,24 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
     sched = build_scheduler(scheduler, SchedulerBuildContext(
         cluster=cluster, store=store, qos=qos, specs=specs,
         predictor=predictor, m_max=m_max, max_candidates=max_candidates,
-        schema_version=schema_version, retrain_every=retrain_every))
+        schema_version=schema_version, retrain_every=retrain_every,
+        learned_shape_margin=learned_shape_margin,
+        harvest_headroom=harvest_headroom,
+        qos_release_cooldown_s=qos_release_cooldown_s))
     if dual_staged is None:
         dual_staged = dual and entry.dual_staged_default
     aut = Autoscaler(cluster, sched, ScalingConfig(
         release_s=release_s, keepalive_s=keepalive_s,
         dual_staged=dual_staged, init_ms=init_ms,
         migrate=migrate), events=events)
+    # scheduler-initiated releases (harvesting's QoS-breach give-back)
+    # enter the autoscaler's keep-alive ledger instead of a private one
+    sched.release_ledger = aut
     cfg = SimConfig(collect_samples=collect_samples, seed=sim_seed,
                     schema_version=schema_version,
                     online_retrain=online_retrain,
-                    retrain_every=retrain_every)
+                    retrain_every=retrain_every,
+                    learned_shape_margin=learned_shape_margin)
     if sample_every_s is not None:
         cfg.sample_every_s = sample_every_s
     if use_engine is not None:
@@ -435,6 +445,9 @@ def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
                         max_candidates: int = 4,
                         sim_seed: int = 0,
                         router=None,
+                        learned_shape_margin: bool = False,
+                        harvest_headroom: float = 0.85,
+                        qos_release_cooldown_s: float = 30.0,
                         events: Optional[EventHub] = None) -> Simulation:
     """Assemble a full Simulation for `scenario` (world built on demand,
     heterogeneous elastic cluster from the scenario's node classes).
@@ -461,4 +474,6 @@ def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
         retrain_every=retrain_every, sample_every_s=sample_every_s,
         schema_version=world.schema_version, dual_staged=dual_staged,
         max_candidates=max_candidates, sim_seed=sim_seed,
-        router=router, events=events)
+        router=router, learned_shape_margin=learned_shape_margin,
+        harvest_headroom=harvest_headroom,
+        qos_release_cooldown_s=qos_release_cooldown_s, events=events)

@@ -70,6 +70,14 @@ class BaseScheduler:
     #: table-driven schedulers (Jiagu) accept an attached
     #: ``PredictionService`` for batched/cached capacity solving
     accepts_service = False
+    #: pipeline hosts record a ``pipeline.DecisionTrace`` per decision
+    #: when True (legacy monolithic schedulers never produce one).
+    #: Off by default — traces exist to be consumed through the
+    #: ``on_schedule`` observer hook, so ``Platform.build`` turns
+    #: recording on when observers are attached (or when the manifest's
+    #: ``pipeline.decision_traces`` forces it); standalone consumers
+    #: set the attribute directly.
+    trace_decisions = False
 
     def __init__(self, cluster: Cluster, store: ProfileStore,
                  qos: QoSStore):
@@ -77,6 +85,20 @@ class BaseScheduler:
         self.store = store
         self.qos = qos
         self.metrics = SchedMetrics()
+        #: the most recent decision's trace (pipeline schedulers only);
+        #: consumed by the autoscaler via ``take_trace`` and forwarded
+        #: through the ``on_schedule`` observer hook
+        self.last_trace = None
+        # dual-staged scaling picks are pipeline stages (swappable via
+        # platform.register_stage / PlatformConfig.pipeline)
+        from .pipeline import (GreedyLogicalStartPicker,
+                               GreedyReleasePicker)
+        self.release_stage = GreedyReleasePicker(self)
+        self.logical_start_stage = GreedyLogicalStartPicker(self)
+        #: keep-alive accountant for scheduler-initiated releases (the
+        #: assembled autoscaler, wired by build_simulation; None when
+        #: the scheduler runs standalone)
+        self.release_ledger = None
 
     # -- interface ---------------------------------------------------------
 
@@ -107,43 +129,38 @@ class BaseScheduler:
         raise TypeError(f"{type(self).__name__} does not accept a "
                         f"PredictionService")
 
+    # -- decision traces (pipeline schedulers) ----------------------------
+
+    def take_trace(self):
+        """Pop the most recent decision's ``DecisionTrace`` (None for
+        legacy monolithic schedulers or when tracing is disabled)."""
+        trace, self.last_trace = self.last_trace, None
+        return trace
+
+    def on_place(self, node: Node, k: int, now: float,
+                 latency_ms: float) -> None:
+        """Post-placement hook the pipeline's ``DecisionContext`` fires
+        for every binding (Jiagu queues its async capacity update
+        here)."""
+
+    def qos_cooldown_until(self, node: Node) -> float:
+        """Until when the scheduler considers ``node`` QoS-breached
+        (harvesting-style policies override; -inf = never breached).
+        Consumed by breach-aware release/logical-start stages."""
+        return float("-inf")
+
     # -- dual-staged scaling capabilities (platform.ReleasePicker /
-    # -- platform.LogicalStartPicker; the autoscaler consumes these) ------
+    # -- platform.LogicalStartPicker; the autoscaler consumes these).
+    # -- The policies themselves are pipeline stages held in
+    # -- ``release_stage`` / ``logical_start_stage`` (greedy defaults;
+    # -- Jiagu installs the table-bound logical-start stage) -------------
 
     def pick_release_nodes(self, fn: str, k: int) -> List[Tuple[Node, int]]:
-        """Default greedy ``ReleasePicker``: drain least-loaded nodes
-        first so released capacity concentrates (and empty servers can
-        be returned)."""
-        picks = []
-        for node in sorted(self.cluster.nodes_with(fn),
-                           key=lambda n: n.n_instances()):
-            if k <= 0:
-                break
-            take = min(k, node.funcs[fn].n_sat)
-            if take > 0:
-                picks.append((node, take))
-                k -= take
-        return picks
+        return self.release_stage.pick_release_nodes(fn, k)
 
     def pick_logical_start_nodes(self, fn: str, k: int
                                  ) -> List[Tuple[Node, int]]:
-        """Default greedy ``LogicalStartPicker``: re-saturate cached
-        instances most-cached-first.  Cached instances already hold
-        their memory, so any scheduler that opts into dual-staged
-        scaling can absorb a load rise with <1 ms re-routes instead of
-        real cold starts; capacity-table-driven schedulers (Jiagu)
-        override this to absorb only up to the table's capacity."""
-        picks = []
-        nodes = sorted((n for n in self.cluster.nodes_with(fn)
-                        if n.funcs[fn].n_cached > 0),
-                       key=lambda n: -n.funcs[fn].n_cached)
-        for node in nodes:
-            if k <= 0:
-                break
-            take = min(k, node.funcs[fn].n_cached)
-            picks.append((node, take))
-            k -= take
-        return picks
+        return self.logical_start_stage.pick_logical_start_nodes(fn, k)
 
     # -- shared helpers ------------------------------------------------
 
@@ -211,6 +228,9 @@ class JiaguScheduler(BaseScheduler):
         # the legacy per-node reference path)
         self.engine = engine
         self._pending: Dict[int, float] = {}  # node id -> due time
+        # logical starts absorb only up to the capacity table's bound
+        from .pipeline import TableBoundLogicalStartPicker
+        self.logical_start_stage = TableBoundLogicalStartPicker(self)
 
     @property
     def prediction_service(self) -> Optional[PredictionService]:
@@ -371,31 +391,9 @@ class JiaguScheduler(BaseScheduler):
         self.metrics.sched_time_ms += decision_ms
         return out
 
-    # -- dual-staged scaling hooks (used by the autoscaler) ---------------
-    # (the base class's greedy pick_release_nodes already drains
-    # least-loaded-first; Jiagu only overrides the logical-start pick)
-
-    def pick_logical_start_nodes(self, fn: str, k: int
-                                 ) -> List[Tuple[Node, int]]:
-        """Choose cached instances to re-saturate; only where the capacity
-        table says the node can absorb them."""
-        picks = []
-        nodes = sorted((n for n in self.cluster.nodes_with(fn)
-                        if n.funcs[fn].n_cached > 0),
-                       key=lambda n: -n.funcs[fn].n_cached)
-        for node in nodes:
-            if k <= 0:
-                break
-            st = node.funcs[fn]
-            entry = node.table.get(fn)
-            cap = entry.capacity if entry else st.n_sat + st.n_cached
-            absorb = min(st.n_cached, max(cap - st.n_sat, 0))
-            if absorb <= 0:
-                continue
-            take = min(k, absorb)
-            picks.append((node, take))
-            k -= take
-        return picks
+    # -- dual-staged scaling hooks: the base class's greedy release
+    # -- stage drains least-loaded-first; __init__ installed the
+    # -- table-bound logical-start stage (pipeline stages both) ----------
 
 
 # ---------------------------------------------------------------------------
@@ -589,6 +587,13 @@ class SchedulerBuildContext:
     max_candidates: int = 4
     schema_version: int = 1
     retrain_every: Optional[int] = None
+    #: schema-v2 services learn per-shape QoS margins from validation
+    #: error instead of the fixed shape_margin (PlatformConfig
+    #: prediction.learned_shape_margin)
+    learned_shape_margin: bool = False
+    #: harvesting-scheduler knobs (PlatformConfig scheduler section)
+    harvest_headroom: float = 0.85
+    qos_release_cooldown_s: float = 30.0
 
 
 @dataclass(frozen=True)
@@ -631,14 +636,21 @@ def build_scheduler(name: str, ctx: SchedulerBuildContext) -> BaseScheduler:
     return scheduler_entry(name).factory(ctx)
 
 
-def _make_gsight(ctx: SchedulerBuildContext) -> GsightScheduler:
-    return GsightScheduler(
+def make_gsight_scheduler(ctx: SchedulerBuildContext,
+                          cls: Optional[type] = None) -> GsightScheduler:
+    """The one Gsight assembly (legacy class and pipeline stack both):
+    a single place builds the PredictionService, so the two variants
+    can never drift apart in service configuration — the placement-
+    parity gate depends on that."""
+    cls = cls or GsightScheduler
+    return cls(
         ctx.cluster, ctx.store, ctx.qos, ctx.predictor,
         max_candidates=ctx.max_candidates,
         service=PredictionService(
             ctx.predictor, ctx.store, ctx.qos, ctx.specs,
             EngineConfig(m_max=ctx.m_max,
-                         retrain_every=ctx.retrain_every),
+                         retrain_every=ctx.retrain_every,
+                         learned_shape_margin=ctx.learned_shape_margin),
             schema=ctx.schema_version))
 
 
@@ -647,7 +659,7 @@ register_scheduler(
     lambda ctx: JiaguScheduler(ctx.cluster, ctx.store, ctx.qos,
                                ctx.predictor, m_max=ctx.m_max),
     needs_predictor=True, dual_staged_default=True)
-register_scheduler("gsight", _make_gsight, needs_predictor=True)
+register_scheduler("gsight", make_gsight_scheduler, needs_predictor=True)
 register_scheduler(
     "k8s", lambda ctx: K8sScheduler(ctx.cluster, ctx.store, ctx.qos))
 register_scheduler(

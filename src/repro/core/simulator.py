@@ -39,14 +39,89 @@ class EqualSplitRouter:
     """The paper's load-balancing router: every saturated instance of a
     function receives an equal share of its traffic, so a node hosting
     ``n_sat`` of ``total_sat`` instances serves that fraction of the
-    requests.  The default ``platform.Router`` policy."""
+    requests.  The default ``platform.Router`` policy.
+
+    Routers may additionally implement the optional ``begin_tick``
+    hook — the simulator calls it once per tick with the whole cluster
+    before routing, so stateful policies (``LocalityRouter``) can plan
+    cluster-wide shares; routers without the hook stay purely
+    per-node."""
 
     name = "equal-split"
+
+    def begin_tick(self, now: float, cluster: Cluster,
+                   rps: Dict[str, float],
+                   sat_totals: Dict[str, int],
+                   specs: Dict[str, FunctionSpec]) -> None:
+        pass
 
     def route(self, spec: FunctionSpec, fn_rps: float, node: Node,
               n_sat: float, total_sat: int) -> Tuple[float, float]:
         """Returns (per_instance_rps, requests_routed_to_node)."""
         return fn_rps / total_sat, fn_rps * (n_sat / total_sat)
+
+
+class LocalityRouter:
+    """Locality/affinity routing: a function's traffic prefers its
+    *warm*, least-contended placements and spills the rest by score.
+
+    Per tick (``begin_tick``) the router plans cluster-wide shares per
+    function: nodes hosting its saturated instances are scored by
+    contention (foreign instances per own instance — a node mostly
+    dedicated to the function is its warmest, least-interfered home),
+    and traffic waterfills the score order, loading each node's
+    instances up to ``load_cap`` of their saturated throughput before
+    spilling to the next.  Load beyond the capped cluster capacity is
+    distributed proportionally to instance counts (the equal-split
+    overload behaviour).  Totals are conserved: the requests routed
+    across nodes sum to the function's RPS exactly as equal split does.
+
+    Registered as ``"locality"`` in the router registry; A/B'd against
+    ``EqualSplitRouter`` by ``benchmarks/large_cluster.py``."""
+
+    name = "locality"
+
+    def __init__(self, load_cap: float = 0.85):
+        self.load_cap = load_cap
+        self._share: Dict[Tuple[str, int], float] = {}
+
+    def begin_tick(self, now: float, cluster: Cluster,
+                   rps: Dict[str, float],
+                   sat_totals: Dict[str, int],
+                   specs: Dict[str, FunctionSpec]) -> None:
+        self._share.clear()
+        for fn, total_sat in sat_totals.items():
+            fn_rps = rps.get(fn, 0.0)
+            if total_sat <= 0 or fn_rps <= 1e-9:
+                continue
+            spec = specs[fn]
+            nodes = [n for n in cluster.nodes_with(fn)
+                     if n.funcs[fn].n_sat > 0]
+
+            def contention(n: Node) -> float:
+                own = n.funcs[fn]
+                return (n.n_instances() - own.total) / max(own.n_sat, 1)
+
+            order = sorted(nodes, key=lambda n: (contention(n), n.id))
+            remaining = fn_rps
+            for n in order:
+                take = min(remaining, n.funcs[fn].n_sat
+                           * spec.saturated_rps * self.load_cap)
+                self._share[(fn, n.id)] = take
+                remaining -= take
+            if remaining > 1e-9:
+                for n in order:
+                    self._share[(fn, n.id)] += \
+                        remaining * n.funcs[fn].n_sat / total_sat
+
+    def route(self, spec: FunctionSpec, fn_rps: float, node: Node,
+              n_sat: float, total_sat: int) -> Tuple[float, float]:
+        reqs = self._share.get((spec.name, node.id))
+        if reqs is None:
+            # no begin_tick plan (direct use outside the simulator):
+            # degrade to the equal split
+            return fn_rps / total_sat, fn_rps * (n_sat / total_sat)
+        return reqs / max(n_sat, 1e-9), reqs
 
 
 @dataclass
@@ -70,6 +145,9 @@ class SimConfig:
     # samples between online retrains (None -> the predictor's own
     # retrain_every)
     retrain_every: Optional[int] = None
+    # schema-v2 only: learn the per-shape QoS margin from per-shape
+    # validation error instead of the fixed shape_margin formula
+    learned_shape_margin: bool = False
 
 
 @dataclass
@@ -141,7 +219,9 @@ class Simulation:
             scheduler.attach_service(PredictionService(
                 predictor, store, qos, specs,
                 EngineConfig(m_max=scheduler.m_max,
-                             retrain_every=self.cfg.retrain_every),
+                             retrain_every=self.cfg.retrain_every,
+                             learned_shape_margin=self.cfg
+                             .learned_shape_margin),
                 schema=self.cfg.schema_version))
         # the shared service (Jiagu's solver or Gsight's feature/predict
         # client); the legacy per-node path has none
@@ -215,6 +295,12 @@ class Simulation:
 
     def _measure(self, now: float, rps: Dict[str, float], res: SimResult):
         sat_totals = {fn: self.cluster.sat_count(fn) for fn in self.specs}
+        # stateful routers (LocalityRouter) plan cluster-wide shares
+        # once per tick; the hook is optional so purely per-node
+        # policies stay three-line classes
+        begin_tick = getattr(self.router, "begin_tick", None)
+        if begin_tick is not None:
+            begin_tick(now, self.cluster, rps, sat_totals, self.specs)
         for node in self.cluster.nodes.values():
             coloc = node.colocation(self.specs)
             if not coloc:

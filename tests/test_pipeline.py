@@ -1,0 +1,437 @@
+"""The composable scheduling-decision pipeline (filter -> score -> bind).
+
+Covers: stage-level behaviour (pre-decision capacity gate, filters,
+scorers, picker stages), the placement-parity gate for all four
+re-expressed schedulers (pipeline stack vs legacy ``schedule()`` must be
+bit-identical end to end), the ``HarvestingScheduler``'s QoS-margin
+release behaviour, and ``DecisionTrace`` round-tripping through the
+``EventHub`` observer hooks."""
+import json
+
+import pytest
+
+from repro.core import (CapEntry, Cluster, GroundTruth, PerfPredictor,
+                        ProfileStore, QoSStore, generate_dataset,
+                        scenario_world, synthetic_functions)
+from repro.core.harvesting import HarvestingScheduler
+from repro.core.pipeline import (Binder, BreachAwareReleasePicker,
+                                 CapacityTableGate, DecisionContext,
+                                 DecisionTrace, GreedyLogicalStartPicker,
+                                 GreedyReleasePicker, InstanceCountScorer,
+                                 NodeFilter, NodeScorer,
+                                 PipelineJiaguScheduler, PreDecision,
+                                 RequestedFitFilter, StaleTableFilter,
+                                 TableBoundLogicalStartPicker,
+                                 WarmAffinityScorer)
+from repro.platform import (Observer, Platform, PlatformConfig,
+                            PlatformConfigError, get_stage,
+                            register_stage, registered_stages,
+                            scenario_from_config, scheduler_entry)
+
+SMALL = {
+    "scenario": {"kind": "burst-storm", "n_functions": 3,
+                 "duration_s": 40, "target_nodes": 6, "seed": 0},
+    "prediction": {"n_train": 250, "n_trees": 6},
+}
+
+PAIRS = [("k8s", "k8s-pipeline"), ("owl", "owl-pipeline"),
+         ("jiagu", "jiagu-pipeline"), ("gsight", "gsight-pipeline")]
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return scenario_from_config(PlatformConfig.from_dict(SMALL))
+
+
+def _fresh_world(scenario):
+    """GroundTruth.measure draws noise from a stateful RNG, so parity
+    arms must each start from identical world state."""
+    return scenario_world(scenario, n_train=250, n_trees=6)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """Hand-built world pieces for stage-level unit tests."""
+    specs = synthetic_functions(3, seed=4)
+    gt = GroundTruth(seed=0)
+    store = ProfileStore(seed=0)
+    qos = QoSStore(store, gt)
+    pred = PerfPredictor(n_trees=6, max_depth=6, seed=0)
+    X, y = generate_dataset(specs, gt, store, qos, 300, seed=1)
+    pred.add_dataset(X, y)
+    return specs, gt, store, qos, pred
+
+
+def _jiagu_pipeline(tiny) -> PipelineJiaguScheduler:
+    specs, _gt, store, qos, pred = tiny
+    return PipelineJiaguScheduler(Cluster(specs), store, qos, pred)
+
+
+# ---------------------------------------------------------------------------
+# Stage-level units
+# ---------------------------------------------------------------------------
+
+
+def test_stages_satisfy_protocols():
+    assert isinstance(StaleTableFilter(), NodeFilter)
+    assert isinstance(RequestedFitFilter(), NodeFilter)
+    assert isinstance(InstanceCountScorer(), NodeScorer)
+    assert isinstance(WarmAffinityScorer(), NodeScorer)
+    assert isinstance(CapacityTableGate(), PreDecision)
+    from repro.core.pipeline import DeployOneBinder, JiaguSlowBinder
+    assert isinstance(JiaguSlowBinder(), Binder)
+    assert isinstance(DeployOneBinder(), Binder)
+
+
+def test_capacity_table_gate_places_from_fresh_tables(tiny):
+    sched = _jiagu_pipeline(tiny)
+    fn = sorted(sched.cluster.specs)[0]
+    node = sched.cluster.add_node()
+    node.deploy(fn, 2)
+    node.table[fn] = CapEntry(capacity=5, fresh=True)
+    rows_before = sched.metrics.critical_inference_rows
+    ctx = DecisionContext(sched, fn, 3, 0.0,
+                          DecisionTrace(sched.name, fn, 0.0, 3))
+    CapacityTableGate().gate(ctx)
+    # capacity 5, 2 saturated -> 3 more fit at pure table-lookup cost
+    assert ctx.remaining == 0
+    assert node.funcs[fn].n_sat == 5
+    assert sched.metrics.fast == 1
+    assert sched.metrics.critical_inference_rows == rows_before
+    [binding] = ctx.trace.pre_decision
+    assert (binding.node_id, binding.count) == (node.id, 3)
+    assert binding.capacity == 5 and binding.room_before == 3
+
+
+def test_capacity_table_gate_skips_stale_and_full(tiny):
+    sched = _jiagu_pipeline(tiny)
+    fn = sorted(sched.cluster.specs)[0]
+    stale = sched.cluster.add_node()
+    stale.deploy(fn, 1)
+    stale.table[fn] = CapEntry(capacity=9, fresh=False)
+    full = sched.cluster.add_node()
+    full.deploy(fn, 3)
+    full.table[fn] = CapEntry(capacity=3, fresh=True)
+    ctx = DecisionContext(sched, fn, 2, 0.0,
+                          DecisionTrace(sched.name, fn, 0.0, 2))
+    CapacityTableGate().gate(ctx)
+    assert ctx.remaining == 2                      # nothing placeable
+    assert ctx.trace.filtered == {"stale-table": 1,
+                                  "no-table-headroom": 1}
+
+
+def test_scorer_orderings(tiny):
+    sched = _jiagu_pipeline(tiny)
+    names = sorted(sched.cluster.specs)
+    fn = names[0]
+    a = sched.cluster.add_node()
+    a.deploy(names[1], 4)
+    b = sched.cluster.add_node()
+    b.deploy(fn, 1)
+    ctx = DecisionContext(sched, fn, 1, 0.0, None)
+    # most-packed-first
+    assert InstanceCountScorer().score(ctx, a) > \
+        InstanceCountScorer().score(ctx, b)
+    # warm affinity outranks packing
+    assert WarmAffinityScorer().score(ctx, b) > \
+        WarmAffinityScorer().score(ctx, a)
+
+
+def test_picker_stages_match_scheduler_capabilities(tiny):
+    """BaseScheduler delegates the ReleasePicker/LogicalStartPicker
+    capabilities to stage objects; Jiagu installs the table-bound
+    logical-start stage."""
+    sched = _jiagu_pipeline(tiny)
+    assert isinstance(sched.release_stage, GreedyReleasePicker)
+    assert isinstance(sched.logical_start_stage,
+                      TableBoundLogicalStartPicker)
+    fn = sorted(sched.cluster.specs)[0]
+    light = sched.cluster.add_node()
+    light.deploy(fn, 1)
+    heavy = sched.cluster.add_node()
+    heavy.deploy(fn, 5)
+    picks = sched.pick_release_nodes(fn, 2)
+    assert picks[0][0] is light                    # least-loaded first
+    heavy.release(fn, 3)
+    heavy.table[fn] = CapEntry(capacity=4, fresh=True)
+    picks = sched.pick_logical_start_nodes(fn, 3)
+    # table capacity 4, 2 saturated -> absorb only 2 of 3 cached
+    assert picks == [(heavy, 2)]
+
+
+def test_stage_registry_lookup_and_unknown():
+    assert "greedy" in registered_stages("release")
+    assert "table-bound" in registered_stages("logical-start")
+    assert get_stage("release", "breach-aware") is BreachAwareReleasePicker
+    assert get_stage("logical-start", "greedy") is GreedyLogicalStartPicker
+    with pytest.raises(ValueError, match="unknown pipeline stage"):
+        get_stage("release", "no-such-stage")
+    with pytest.raises(ValueError, match="already registered"):
+        register_stage("release", "greedy", GreedyReleasePicker)
+
+
+# ---------------------------------------------------------------------------
+# Placement parity: pipeline stacks vs legacy schedule()
+# ---------------------------------------------------------------------------
+
+
+def _run(scenario, name):
+    plat = Platform.build(
+        scenario=scenario, config={**SMALL, "scheduler": {"name": name}},
+        world=_fresh_world(scenario))
+    res = plat.run()
+    placement = sorted(
+        tuple(sorted((fn, s.n_sat, s.n_cached)
+                     for fn, s in n.funcs.items()))
+        for n in plat.cluster.nodes.values())
+    return res, placement
+
+
+@pytest.mark.parametrize("legacy_name,pipeline_name", PAIRS)
+def test_pipeline_placement_parity(scenario, legacy_name, pipeline_name):
+    legacy, place_l = _run(scenario, legacy_name)
+    pipe, place_p = _run(scenario, pipeline_name)
+    assert place_l == place_p
+    assert legacy.density == pipe.density
+    assert legacy.qos_violation_rate == pipe.qos_violation_rate
+    assert legacy.requests == pipe.requests
+    assert legacy.nodes_peak == pipe.nodes_peak
+    # (sched_time_ms is measured inference wall time — identical call
+    # structure but not bit-identical clock readings)
+    for attr in ("decisions", "fast", "slow", "instances_placed",
+                 "failed"):
+        assert getattr(legacy.sched, attr) == getattr(pipe.sched, attr), \
+            attr
+    for attr in ("real_cold_starts", "logical_cold_starts", "releases",
+                 "evictions", "migrations"):
+        assert getattr(legacy.scaling, attr) == \
+            getattr(pipe.scaling, attr), attr
+
+
+def test_pipeline_variants_registered():
+    for _legacy, name in PAIRS:
+        entry = scheduler_entry(name)
+        assert entry.name == name
+    assert scheduler_entry("jiagu-pipeline").dual_staged_default
+    assert scheduler_entry("jiagu-pipeline").needs_predictor
+    assert not scheduler_entry("k8s-pipeline").needs_predictor
+
+
+# ---------------------------------------------------------------------------
+# DecisionTrace: emission, round trip, config toggle
+# ---------------------------------------------------------------------------
+
+
+class _TraceCollector(Observer):
+    def __init__(self):
+        self.traces = []
+        self.schedules = 0
+
+    def on_schedule(self, now, fn, placements, trace=None):
+        self.schedules += 1
+        self.traces.append((fn, placements, trace))
+
+
+def test_decision_traces_through_eventhub(scenario):
+    obs = _TraceCollector()
+    plat = Platform.build(
+        scenario=scenario,
+        config={**SMALL, "scheduler": {"name": "jiagu-pipeline"}},
+        world=_fresh_world(scenario), observers=[obs])
+    plat.run()
+    assert obs.schedules > 0
+    traced = [t for _fn, _p, t in obs.traces if t is not None]
+    assert traced, "pipeline scheduler produced no traces"
+    for fn, placements, trace in obs.traces:
+        assert trace is not None
+        assert trace.fn == fn
+        assert trace.placed == sum(p.count for p in placements)
+        assert trace.requested >= trace.placed
+        # every placement is explained by a gate or binder record
+        explained = sum(b.count for b in trace.pre_decision) \
+            + sum(b.count for b in trace.bindings)
+        assert explained == trace.placed
+        # round trip: to_dict must be pure JSON
+        d = trace.to_dict()
+        back = json.loads(json.dumps(d))
+        assert back["fn"] == fn
+        assert back["placed"] == trace.placed
+        summary = trace.summary()
+        json.dumps(summary)
+        assert summary["placed"] == trace.placed
+
+
+def test_legacy_schedulers_produce_no_trace(scenario):
+    obs = _TraceCollector()
+    plat = Platform.build(scenario=scenario, config=SMALL,
+                          world=_fresh_world(scenario), observers=[obs])
+    plat.run()
+    assert obs.schedules > 0
+    assert all(t is None for _fn, _p, t in obs.traces)
+
+
+def test_decision_traces_config_toggle(scenario):
+    obs = _TraceCollector()
+    plat = Platform.build(
+        scenario=scenario,
+        config={**SMALL, "scheduler": {"name": "jiagu-pipeline"},
+                "pipeline": {"decision_traces": False}},
+        world=_fresh_world(scenario), observers=[obs])
+    plat.run()
+    assert obs.schedules > 0
+    assert all(t is None for _fn, _p, t in obs.traces)
+
+
+def test_pipeline_section_roundtrip_and_validation():
+    cfg = PlatformConfig.from_dict({
+        "pipeline": {"decision_traces": False,
+                     "release_picker": "breach-aware",
+                     "logical_start_picker": "greedy"}})
+    d = cfg.to_dict()
+    json.dumps(d)
+    assert PlatformConfig.from_dict(d) == cfg
+    with pytest.raises(ValueError, match="unknown pipeline stage"):
+        PlatformConfig.from_dict({
+            "pipeline": {"release_picker": "no-such"}}).validate()
+    with pytest.raises(PlatformConfigError, match="harvest_headroom"):
+        PlatformConfig.from_dict({
+            "scheduler": {"harvest_headroom": 0.0}}).validate()
+    with pytest.raises(PlatformConfigError, match="cooldown"):
+        PlatformConfig.from_dict({
+            "scheduler": {"qos_release_cooldown_s": -1.0}}).validate()
+
+
+def test_picker_stage_override_from_manifest(scenario):
+    plat = Platform.build(
+        scenario=scenario,
+        config={**SMALL, "pipeline": {"release_picker": "breach-aware"}},
+        world=_fresh_world(scenario))
+    assert isinstance(plat.scheduler.release_stage,
+                      BreachAwareReleasePicker)
+
+
+# ---------------------------------------------------------------------------
+# HarvestingScheduler
+# ---------------------------------------------------------------------------
+
+
+def _harvesting(tiny, **kw) -> HarvestingScheduler:
+    specs, _gt, store, qos, pred = tiny
+    sched = HarvestingScheduler(Cluster(specs), store, qos, pred, **kw)
+    sched.trace_decisions = True        # standalone: opt in explicitly
+    return sched
+
+
+def test_harvesting_schedules_and_traces(tiny):
+    sched = _harvesting(tiny)
+    fn = sorted(sched.cluster.specs)[0]
+    placements = sched.schedule(fn, 4, 0.0)
+    assert sum(p.count for p in placements) == 4
+    trace = sched.take_trace()
+    assert trace is not None and trace.placed == 4
+    assert sched.metrics.slow >= 1          # capacity-solved placements
+
+
+def test_harvesting_headroom_bounds_placement(tiny):
+    tight = _harvesting(tiny, harvest_headroom=0.5)
+    loose = _harvesting(tiny, harvest_headroom=1.0)
+    fn = sorted(tight.cluster.specs)[0]
+    tight.schedule(fn, 30, 0.0)
+    loose.schedule(fn, 30, 0.0)
+    per_node_tight = max(n.funcs[fn].n_sat
+                         for n in tight.cluster.nodes.values())
+    per_node_loose = max(n.funcs[fn].n_sat
+                         for n in loose.cluster.nodes.values())
+    assert per_node_tight < per_node_loose
+
+
+def test_harvesting_qos_breach_release_and_cooldown(tiny):
+    sched = _harvesting(tiny, qos_release_cooldown_s=30.0)
+    fn = sorted(sched.cluster.specs)[0]
+    sched.schedule(fn, 8, 0.0)
+    node = max(sched.cluster.nodes.values(),
+               key=lambda n: n.funcs.get(fn).n_sat if fn in n.funcs else 0)
+    sat_before = node.funcs[fn].n_sat
+    assert sat_before > 0
+
+    sched.observe(node, ok=False, now=10.0)
+    # released (not evicted): saturated dropped, cached grew
+    assert sched.qos_breaches == 1
+    assert sched.qos_released >= 1
+    assert node.funcs[fn].n_sat < sat_before
+    assert node.funcs[fn].n_cached >= 1
+    assert sched.qos_cooldown_until(node) == 40.0
+
+    # a second breach during cooldown extends it but releases nothing
+    released = sched.qos_released
+    sched.observe(node, ok=False, now=12.0)
+    assert sched.qos_released == released
+    assert sched.qos_cooldown_until(node) == 42.0
+
+    # while cooling down, the pipeline refuses to re-harvest the node
+    sched.schedule(fn, 2, 15.0)
+    trace = sched.take_trace()
+    assert "qos-cooldown" in trace.filtered
+    assert all(b.node_id != node.id
+               for b in trace.pre_decision + trace.bindings)
+    # ... and the logical-start stage skips it too
+    sched._now = 15.0
+    assert all(n.id != node.id
+               for n, _k in sched.pick_logical_start_nodes(fn, 1))
+
+    # keep-alive: released instances the load never re-claimed are
+    # evicted for real
+    cached = node.funcs[fn].n_cached
+    sched.on_tick(100.0)
+    assert node.funcs.get(fn) is None or \
+        node.funcs[fn].n_cached < cached
+
+
+def test_harvesting_release_enters_autoscaler_ledger(tiny):
+    """With an assembled control plane, QoS-breach releases go through
+    Autoscaler.note_release: counted, evented, and keep-alive-evicted
+    by the standard ledger instead of harvesting's private fallback."""
+    from repro.core import Autoscaler, ScalingConfig
+    sched = _harvesting(tiny)
+    aut = Autoscaler(sched.cluster, sched, ScalingConfig())
+    sched.release_ledger = aut          # what build_simulation wires
+    fn = sorted(sched.cluster.specs)[0]
+    sched.schedule(fn, 6, 0.0)
+    node = max(sched.cluster.nodes.values(),
+               key=lambda n: n.funcs[fn].n_sat)
+    sched.observe(node, ok=False, now=5.0)
+    assert sched.qos_released >= 1
+    assert aut.metrics.releases == sched.qos_released
+    assert not sched._released               # fallback deque unused
+    ledgered = sum(e[2] for e in aut._ledger.q.get(fn, ()))
+    assert ledgered == sched.qos_released
+
+
+def test_harvesting_breach_aware_release_prefers_breached_node(tiny):
+    sched = _harvesting(tiny)
+    fn = sorted(sched.cluster.specs)[0]
+    calm = sched.cluster.add_node()
+    calm.deploy(fn, 1)                      # least-loaded, but healthy
+    breached = sched.cluster.add_node()
+    breached.deploy(fn, 4)
+    sched._cooldown_until[breached.id] = 50.0
+    picks = sched.release_stage.pick_release_nodes(fn, 2)
+    assert picks[0][0] is breached
+
+
+def test_harvesting_from_pure_manifest(scenario):
+    entry = scheduler_entry("harvesting")
+    assert entry.needs_predictor and entry.dual_staged_default
+    plat = Platform.build(
+        scenario=scenario,
+        config={**SMALL,
+                "scheduler": {"name": "harvesting",
+                              "harvest_headroom": 0.85,
+                              "qos_release_cooldown_s": 20.0}},
+        world=_fresh_world(scenario))
+    assert isinstance(plat.scheduler, HarvestingScheduler)
+    assert plat.scheduler.harvest_headroom == 0.85
+    assert plat.scheduler.cooldown_s == 20.0
+    res = plat.run()
+    assert res.ticks == 40
+    assert res.sched.instances_placed > 0

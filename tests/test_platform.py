@@ -282,7 +282,7 @@ class _Counting(Observer):
     def on_tick(self, now, sim):
         self.ticks += 1
 
-    def on_schedule(self, now, fn, placements):
+    def on_schedule(self, now, fn, placements, trace=None):
         self.schedules += 1
         self.placed += sum(p.count for p in placements)
 

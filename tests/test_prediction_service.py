@@ -289,3 +289,90 @@ def test_v2_service_capacity_grows_with_node_size(world):
         total_big += cap_big
         assert cap_big >= cap_std
     assert total_big > total_std
+
+
+# ---------------------------------------------------------------------------
+# Learned per-shape QoS margins (schema v2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def v2_service_pair(world):
+    """One v2-trained forest over the std+2x fleet, served once with the
+    fixed margin formula and once with learned per-shape margins."""
+    specs, gt, store, qos, _ = world
+    pred = PerfPredictor(n_trees=8, max_depth=7, seed=3)
+    X, y = generate_dataset(specs, gt, store, qos, 500, seed=5, schema=2,
+                            node_shapes=[gt.node, BIG])
+    pred.add_dataset(X, y)
+    fixed = PredictionService(pred, store, qos, specs, EngineConfig(),
+                              schema=2)
+    learned = PredictionService(
+        pred, store, qos, specs,
+        EngineConfig(learned_shape_margin=True), schema=2)
+    return fixed, learned, gt
+
+
+def test_learned_shape_margins_cover_fleet_shapes(v2_service_pair):
+    _fixed, learned, gt = v2_service_pair
+    margins = learned.shape_margins()
+    std_key = learned.schema.shape_key(gt.node, learned.cfg.quant)
+    big_key = learned.schema.shape_key(BIG, learned.cfg.quant)
+    assert std_key in margins and big_key in margins
+    for m in margins.values():
+        assert learned.cfg.qos_margin_base <= m <= learned.cfg.margin_cap
+    # the bound scale is driven by the learned margin, per shape
+    assert learned.qos_bound_scale(gt.node) == \
+        pytest.approx(1.0 / (1.0 + margins[std_key]))
+    assert learned.qos_bound_scale(BIG) == \
+        pytest.approx(1.0 / (1.0 + margins[big_key]))
+
+
+def test_fixed_margin_formula_is_default_compatible(v2_service_pair):
+    fixed, _learned, gt = v2_service_pair
+    assert fixed.qos_bound_scale(gt.node) == \
+        pytest.approx(1.0 / 1.06)
+    r = BIG.cpu_mcores / gt.node.cpu_mcores
+    assert fixed.qos_bound_scale(BIG) == \
+        pytest.approx(1.0 / (1.0 + 0.06 + 0.08 * abs(r - 1.0)))
+
+
+def test_learned_margin_falls_back_for_unseen_shape(v2_service_pair):
+    _fixed, learned, gt = v2_service_pair
+    tiny = NodeResources(cpu_mcores=12_000.0, mem_mb=32_768.0,
+                         mem_bw_gbps=17.0, llc_mb=15.0)
+    r = tiny.cpu_mcores / gt.node.cpu_mcores
+    assert learned.qos_bound_scale(tiny) == \
+        pytest.approx(1.0 / (1.0 + 0.06 + 0.08 * abs(r - 1.0)))
+
+
+def test_learned_margins_relearned_per_epoch(v2_service_pair):
+    _fixed, learned, _gt = v2_service_pair
+    before = learned.shape_margins()
+    assert learned._shape_margins is not None
+    learned.invalidate()                # external cache clear
+    assert learned._shape_margins is None
+    learned.retrain()                   # epoch bump -> eager re-learn
+    assert learned._shape_margins is not None
+    after = learned.shape_margins()
+    assert set(after) == set(before)    # same fleet shapes re-learned
+
+
+def test_learned_margin_is_noop_under_v1(world):
+    specs, _gt, store, qos, pred = world
+    svc = PredictionService(pred, store, qos, specs,
+                            EngineConfig(learned_shape_margin=True),
+                            schema=1)
+    assert svc.qos_bound_scale(BIG) == 1.0
+    assert svc.shape_margins() == {}
+
+
+def test_platform_validates_learned_margin_needs_v2():
+    from repro.platform import PlatformConfig, PlatformConfigError
+    with pytest.raises(PlatformConfigError, match="learned_shape_margin"):
+        PlatformConfig.from_dict({
+            "prediction": {"learned_shape_margin": True}}).validate()
+    # with schema v2 the flag passes validation and reaches the service
+    PlatformConfig.from_dict({
+        "prediction": {"learned_shape_margin": True,
+                       "schema_version": 2}}).validate()
