@@ -29,6 +29,7 @@ from repro.core import update_capacity_table
 from repro.core.cluster import Node
 from repro.core.interference import NodeResources
 from repro.engine import CapacityEngine, EngineConfig
+from repro.telemetry import RunReport, append_bench
 
 M_MAX = 16
 N_PATTERNS = 24
@@ -69,7 +70,11 @@ def _clear(nodes):
         n.table.clear()
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, bench: bool = False):
+    """``bench=True`` (the driver/__main__ path) persists a
+    ``RunReport`` into ``BENCH_capacity_engine.json`` for the
+    regression gate; tests calling this directly leave the repo root
+    untouched."""
     world = build_world(n_synthetic=6)
     pred = world.predictor
     sizes = [24, 128, 256] if quick else [24, 64, 128, 256, 512]
@@ -139,6 +144,21 @@ def run(quick: bool = False):
               f"calls {r['legacy_calls']}->{r['engine_calls']} "
               f"({r['call_reduction']}x) tables_equal={r['tables_equal']} "
               f"=> {'PASS' if ok else 'FAIL'}")
+    if bench:
+        top = rows[-1]
+        report = RunReport.build(
+            "capacity_engine", mode="quick" if quick else "full",
+            manifest={"m_max": M_MAX, "n_patterns": N_PATTERNS,
+                      "sizes": sizes},
+            metrics={"speedup_max_size": top["speedup"],
+                     "warm_speedup_max_size": top["warm_speedup"],
+                     "call_reduction_max_size": top["call_reduction"],
+                     "tables_equal_all": all(r["tables_equal"]
+                                             for r in rows)},
+            rows=rows)
+        path = append_bench(report)
+        print(f"# bench: appended {report.mode} run "
+              f"({len(rows)} rows, git {report.git_sha}) -> {path}")
     return rows
 
 
@@ -147,4 +167,4 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    run(quick=args.quick)
+    run(quick=args.quick, bench=True)

@@ -43,6 +43,7 @@ from .common import ARTIFACTS, emit, save_artifact
 from repro.core import scenario_world
 from repro.platform import (JsonlObserver, Platform, PlatformConfig,
                             scenario_from_config)
+from repro.telemetry import RunReport, append_bench
 
 N_FUNCTIONS = 24
 STUDY_KINDS = ("burst-storm", "diurnal-shift", "coldstart-churn",
@@ -90,6 +91,7 @@ def _series_nan_free(res) -> bool:
 def _result_row(kind: str, target_nodes: int, system: str, res,
                 wall_s: float) -> dict:
     s = res.sched
+    a = res.scaling
     n_sched = max(s.decisions, 1)
     return {
         "scenario": kind, "target_nodes": target_nodes, "system": system,
@@ -100,6 +102,8 @@ def _result_row(kind: str, target_nodes: int, system: str, res,
         "sched_ms_mean": round(s.mean_latency_ms, 4),
         "sched_ms_p50": round(s.p50_latency_ms, 4),
         "sched_ms_p99": round(s.p99_latency_ms, 4),
+        "cold_ms_p50": round(a.cold_start_ms.p50, 4),
+        "cold_ms_p99": round(a.cold_start_ms.p99, 4),
         "rows_per_schedule": round(s.critical_inference_rows / n_sched, 2),
         "fast_frac": round(s.fast / max(s.fast + s.slow, 1), 3),
         "nan_free": _series_nan_free(res),
@@ -495,10 +499,33 @@ def retrain_online(quick: bool = False, seed: int = 0,
     return record
 
 
-def run(quick: bool = False, seed: int = 0, spec: dict = None):
+def _headline_metrics(rows: list) -> dict:
+    """Per-system headline scalars for the RunReport: mean density,
+    worst QoS violation rate, worst cold-start / sched-cost p99."""
+    out = {}
+    systems = sorted({r["system"] for r in rows})
+    for system in systems:
+        rs = [r for r in rows if r["system"] == system]
+        out[f"{system}.density_mean"] = round(
+            sum(r["density"] for r in rs) / len(rs), 3)
+        out[f"{system}.qos_violation_max"] = max(
+            r["qos_violation"] for r in rs)
+        out[f"{system}.cold_ms_p99_max"] = max(
+            r["cold_ms_p99"] for r in rs)
+        out[f"{system}.sched_ms_p99_max"] = max(
+            r["sched_ms_p99"] for r in rs)
+    return out
+
+
+def run(quick: bool = False, seed: int = 0, spec: dict = None,
+        bench: bool = False):
     """``spec`` defaults to ``study_spec(quick, seed)`` —
     ``benchmarks.run`` passes its own so the whole study is driven by
-    one manifest tree."""
+    one manifest tree.  ``bench=True`` (the driver/__main__ path)
+    additionally persists a ``RunReport`` into the repo-root
+    ``BENCH_large_cluster.json`` trajectory for the regression gate and
+    the dashboard; library callers (tests) default to not touching the
+    repo root."""
     spec = spec or study_spec(quick=quick, seed=seed)
     rows = run_study(spec)
     print("\n# A/B full-trace parity (legacy vs CapacityEngine)")
@@ -527,6 +554,19 @@ def run(quick: bool = False, seed: int = 0, spec: dict = None):
               "ab_parity": parity, "pipeline_parity": pipe_parity,
               "router_ab": routers}
     save_artifact("large_cluster", record)
+    if bench:
+        report = RunReport.build(
+            "large_cluster", mode="quick" if quick else "full",
+            manifest={"sizes": spec["sizes"],
+                      "kinds": list(spec["kinds"]),
+                      "systems": list(spec.get("systems", STUDY_SYSTEMS)),
+                      "base": spec["base"]},
+            metrics=_headline_metrics(rows), rows=rows,
+            meta={"ab_tables_equal": parity["tables_equal"],
+                  "n_functions": N_FUNCTIONS})
+        path = append_bench(report)
+        print(f"# bench: appended {report.mode} run "
+              f"({len(rows)} rows, git {report.git_sha}) -> {path}")
     return record
 
 
@@ -543,4 +583,4 @@ if __name__ == "__main__":
     if args.retrain_online:
         retrain_online(quick=args.quick, seed=args.seed)
     else:
-        run(quick=args.quick, seed=args.seed)
+        run(quick=args.quick, seed=args.seed, bench=True)

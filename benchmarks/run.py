@@ -38,16 +38,21 @@ def main() -> None:
         ("qos_coldstart", lambda: qos_coldstart.run(
             duration=300 if args.quick else 600, quick=args.quick)),
         ("prediction", lambda: prediction.run(quick=args.quick)),
-        ("capacity_engine", lambda: capacity_engine.run(quick=args.quick)),
+        ("capacity_engine", lambda: capacity_engine.run(
+            quick=args.quick, bench=True)),
         # the large-cluster study is driven through repro.platform
         # manifests: one PlatformConfig.from_dict-validated dict per
         # (scenario, size, system) run, derived from this spec; each
         # run's observer streams (ticks / schedule decisions with
         # DecisionTrace summaries / scaling / retrains) land in
         # artifacts/events/*.jsonl for cross-run dashboards
+        # both studies persist RunReports into the repo-root
+        # BENCH_*.json trajectories (repro.telemetry.report) — the
+        # regression gate and the dashboard read them
         ("large_cluster", lambda: large_cluster.run(
             quick=args.quick,
-            spec=large_cluster.study_spec(quick=args.quick))),
+            spec=large_cluster.study_spec(quick=args.quick),
+            bench=True)),
         ("model_perf", lambda: model_perf.run(quick=args.quick)),
         ("roofline_report", lambda: roofline_report.run()),
     ]

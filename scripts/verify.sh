@@ -2,11 +2,24 @@
 # Tier-1 verification: the exact command the roadmap pins.
 #   scripts/verify.sh            full suite + platform smoke
 #   scripts/verify.sh tests/...  any extra pytest args pass through
+#   scripts/verify.sh --bench    benchmark regression gate only: run the
+#                                quick large-cluster + capacity-engine
+#                                studies (persisting RunReports into the
+#                                repo-root BENCH_*.json trajectories),
+#                                then diff the fresh runs against the
+#                                checked-in baselines
+#                                (python -m repro.telemetry.gate; exits
+#                                non-zero with a delta table on any
+#                                density/QoS/latency regression), and
+#                                render the self-contained HTML
+#                                dashboard from the trajectories + the
+#                                runs' JSONL event streams
 #   scripts/verify.sh --full     tier-1 + slow-marked tests + the quick
 #                                large-cluster scenario benchmark (the
 #                                engine-default A/B gate end to end) +
 #                                the 256-node online-retraining / schema
-#                                v1-vs-v2 gate
+#                                v1-vs-v2 gate + the --bench regression
+#                                gate
 # The platform smoke step builds every registered scheduler — the four
 # legacy ones, their pipeline-stack re-expressions, and the harvesting
 # scheduler — against one scenario from pure PlatformConfig manifest
@@ -17,12 +30,30 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+run_bench_gate() {
+    # quick studies append fresh RunReports to the BENCH trajectories...
+    python -m benchmarks.large_cluster --quick
+    python -m benchmarks.capacity_engine --quick
+    # ...the gate diffs the fresh runs against the checked-in baselines
+    # (hard-fails on density/QoS regressions; generous slack on the
+    # wall-clock latency percentiles)...
+    python -m repro.telemetry.gate
+    # ...and the dashboard renders the trajectories + event streams
+    python -m repro.telemetry.dashboard
+}
+
+if [ "${1:-}" = "--bench" ]; then
+    shift
+    run_bench_gate
+    exit 0
+fi
 if [ "${1:-}" = "--full" ]; then
     shift
     RUN_SLOW=1 python -m pytest -x -q "$@"
     python -m repro.platform
-    python -m benchmarks.large_cluster --quick
     python -m benchmarks.large_cluster --retrain-online --quick
+    run_bench_gate
     exit 0
 fi
 python -m pytest -x -q "$@"

@@ -16,7 +16,11 @@ without the run loop knowing who is listening:
     transition: ``"logical_start"``, ``"real_cold_start"``,
     ``"release"``, ``"evict"``, or ``"migrate"``,
   * ``on_retrain(service)``      — the prediction service's online
-    retraining policy fired (forest refit + epoch bump + cache clear).
+    retraining policy fired (forest refit + epoch bump + cache clear),
+  * ``on_span(span)``            — a control-plane span closed
+    (``repro.telemetry.spans``): wall-clock + counter deltas for
+    ``schedule`` / ``retrain`` / ``capacity_solve`` sections, persisted
+    alongside the ``DecisionTrace`` stream.
 
 ``EventHub`` fans one event out to every registered observer; the hub
 with no observers is the default everywhere and costs one empty-list
@@ -51,6 +55,9 @@ class Observer:
         pass
 
     def on_retrain(self, service) -> None:
+        pass
+
+    def on_span(self, span) -> None:
         pass
 
 
@@ -92,6 +99,10 @@ class EventHub(Observer):
         for o in self.observers:
             o.on_retrain(service)
 
+    def on_span(self, span) -> None:
+        for o in self.observers:
+            o.on_span(span)
+
 
 class JsonlObserver(Observer):
     """Persist the observer streams to a JSONL artifact, one event per
@@ -107,7 +118,14 @@ class JsonlObserver(Observer):
     retrain events are always complete); ``trace.summary()`` — the
     compact ``DecisionTrace`` form — rides every schedule event, so a
     dashboard can reconstruct why each placement happened.  Usable as a
-    context manager; the file is opened lazily on the first event."""
+    context manager; the file is opened lazily on the first event.
+
+    Durability: the handle is line-buffered and every event is flushed
+    as it is written, so a crash mid-run (or an interpreter exit that
+    never reached ``close()``) loses at most the event being formatted,
+    never a buffered tail.  Nested parent directories are created on
+    first write; writing after ``close()`` raises instead of silently
+    truncating the artifact with a fresh ``open(.., "w")``."""
 
     def __init__(self, path: str, tick_every: int = 1,
                  meta: Optional[dict] = None):
@@ -116,22 +134,38 @@ class JsonlObserver(Observer):
         self.meta = meta
         self.events = 0
         self._fh = None
+        self._closed = False
 
     # -- plumbing ---------------------------------------------------------
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
     def _write(self, record: dict) -> None:
+        if self._closed:
+            raise ValueError(
+                f"JsonlObserver({self.path!r}) is closed; events after "
+                f"close() would truncate the artifact")
         if self._fh is None:
             d = os.path.dirname(self.path)
             if d:
                 os.makedirs(d, exist_ok=True)
-            self._fh = open(self.path, "w")
+            # line-buffered: one event == one line == one flush unit
+            self._fh = open(self.path, "w", buffering=1)
             if self.meta:
                 self._fh.write(json.dumps(
                     {"event": "meta", **self.meta}) + "\n")
         self._fh.write(json.dumps(record) + "\n")
+        self._fh.flush()
         self.events += 1
 
+    def flush(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+
     def close(self) -> None:
+        self._closed = True
         if self._fh is not None:
             self._fh.close()
             self._fh = None
@@ -173,3 +207,6 @@ class JsonlObserver(Observer):
         self._write({"event": "retrain", "epoch": service.epoch,
                      "retrains": service.stats.retrains,
                      "samples": service.predictor.n_samples})
+
+    def on_span(self, span) -> None:
+        self._write({"event": "span", **span.to_dict()})

@@ -16,7 +16,7 @@ valid under bounding.
 """
 from __future__ import annotations
 
-from typing import Iterable, Iterator, List, Optional
+from typing import Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -89,6 +89,14 @@ class Reservoir:
     # -- quantiles (exact until sampling kicks in) ------------------------
 
     def percentile(self, q: float) -> float:
+        """The q-th percentile of the recorded stream.
+
+        While ``count <= cap`` the retained buffer is the complete
+        history, so this is the *exact* ``np.percentile`` of every value
+        ever appended (the regime all tier-1 tests and the quick
+        benchmarks run in).  Once Algorithm R starts sampling
+        (``count > cap``) it becomes an unbiased estimate computed over
+        the uniform ``cap``-sized sample."""
         if not self._items:
             return 0.0
         return float(np.percentile(np.asarray(self._items, np.float64), q))
@@ -100,6 +108,40 @@ class Reservoir:
     @property
     def p99(self) -> float:
         return self.percentile(99.0)
+
+    # -- histogram export (the telemetry layer's Histogram metric) --------
+
+    def histogram(self, bins: int = 10,
+                  lo: Optional[float] = None,
+                  hi: Optional[float] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """``(counts, edges)`` over ``bins`` equal-width buckets.
+
+        Bounds default to the *exact* running min/max (so the histogram
+        always covers the full recorded range, even values the sample
+        dropped).  While ``count <= cap`` the counts are exact integers;
+        beyond that each retained value stands for ``count / cap``
+        stream values (fractional counts).  Under the default bounds the
+        sum invariant ``counts.sum() == count`` holds in both regimes;
+        explicit narrower ``lo``/``hi`` exclude out-of-range values from
+        the sum, exactly like ``np.histogram``.  Empty reservoir ->
+        zero counts over [0, 1]."""
+        if bins <= 0:
+            raise ValueError("histogram needs a positive bin count")
+        if not self._items:
+            return (np.zeros(bins, np.float64),
+                    np.linspace(0.0, 1.0, bins + 1))
+        lo = self._min if lo is None else float(lo)
+        hi = self._max if hi is None else float(hi)
+        if hi <= lo:
+            hi = lo + 1.0
+        counts, edges = np.histogram(
+            np.asarray(self._items, np.float64), bins=bins,
+            range=(lo, hi))
+        counts = counts.astype(np.float64)
+        if self.count != len(self._items):
+            counts *= self.count / len(self._items)
+        return counts, edges
 
     # -- list / numpy protocol -------------------------------------------
 

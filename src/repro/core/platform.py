@@ -66,6 +66,7 @@ from .pipeline import (Binder, CandidatePass, DecisionContext,
                        TraceBinding)
 from .pipeline import BreachAwareReleasePicker
 from .harvesting import CooldownLogicalStartPicker, HarvestingScheduler
+from ..telemetry import Telemetry, publish_result
 
 
 class PlatformConfigError(ValueError):
@@ -312,6 +313,25 @@ class PipelineSection:
 
 
 @dataclass
+class TelemetrySection:
+    """Unified metrics/trace layer (``repro.telemetry``).
+
+    ``metrics=None`` (default) attaches the ``MetricsObserver`` +
+    registry only when the platform is built with observers — like
+    decision traces, telemetry exists to be consumed, and bare runs
+    shouldn't pay for it; an explicit bool forces it either way.
+    ``spans=None`` follows the resolved metrics setting; when on, a
+    ``SpanTracer`` is handed to the simulator and prediction service
+    and every closed span fans out through ``EventHub.on_span``.
+    ``histogram_bins`` sizes the bucketed export in
+    ``Platform.metrics_snapshot()`` (0 = summary stats only)."""
+
+    metrics: Optional[bool] = None
+    spans: Optional[bool] = None
+    histogram_bins: int = 0
+
+
+@dataclass
 class SimulationSection:
     #: None -> the SimConfig default (the PredictionService path);
     #: False forces the legacy per-node reference oracle
@@ -330,6 +350,7 @@ _SECTIONS = {
     "prediction": PredictionSection,
     "pipeline": PipelineSection,
     "simulation": SimulationSection,
+    "telemetry": TelemetrySection,
 }
 
 
@@ -373,6 +394,7 @@ class PlatformConfig:
     prediction: PredictionSection = field(default_factory=PredictionSection)
     pipeline: PipelineSection = field(default_factory=PipelineSection)
     simulation: SimulationSection = field(default_factory=SimulationSection)
+    telemetry: TelemetrySection = field(default_factory=TelemetrySection)
 
     # -- (de)serialization ------------------------------------------------
 
@@ -491,12 +513,13 @@ class Platform:
 
     def __init__(self, config: PlatformConfig, scenario: Scenario,
                  world: ScenarioWorld, simulation: Simulation,
-                 hub: EventHub):
+                 hub: EventHub, telemetry: Optional[Telemetry] = None):
         self.config = config
         self.scenario = scenario
         self.world = world
         self.simulation = simulation
         self.hub = hub
+        self.telemetry = telemetry
         self.result: Optional[SimResult] = None
 
     # -- component access --------------------------------------------------
@@ -534,7 +557,25 @@ class Platform:
 
     def run(self, duration_s: Optional[int] = None) -> SimResult:
         self.result = self.simulation.run(duration_s)
+        if self.telemetry is not None:
+            publish_result(
+                self.telemetry.registry, self.result,
+                engine_stats=self.service.stats.snapshot()
+                if self.service is not None else None)
         return self.result
+
+    def metrics_snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """The telemetry registry's JSON-able snapshot ({} when the
+        platform was built without telemetry)."""
+        if self.telemetry is None:
+            return {}
+        return self.telemetry.snapshot(self.config.telemetry.histogram_bins)
+
+    def span_summary(self) -> List[Dict[str, Any]]:
+        """Per-span-name aggregate wall-clock rows ([] without spans)."""
+        if self.telemetry is None:
+            return []
+        return self.telemetry.span_summary()
 
     def to_manifest(self) -> Dict[str, Any]:
         """The config tree as a plain dict (``PlatformConfig.to_dict``)."""
@@ -604,6 +645,24 @@ class Platform:
             if p.engine is not None:
                 service.set_engine(p.engine)
             service.add_retrain_listener(hub.on_retrain)
+        # telemetry section: registry + observer + span tracer.  The
+        # None default resolves against the *external* observers, so a
+        # bare build stays uninstrumented and the parity gates hold.
+        tel = cfg.telemetry
+        want_metrics = tel.metrics if tel.metrics is not None \
+            else bool(hub.observers)
+        want_spans = tel.spans if tel.spans is not None else want_metrics
+        telemetry: Optional[Telemetry] = None
+        if want_metrics or want_spans:
+            telemetry = Telemetry.create(
+                metrics=want_metrics, spans=want_spans,
+                emit=hub.on_span if want_spans else None)
+            if telemetry.observer is not None:
+                hub.add(telemetry.observer)
+            if want_spans:
+                simulation.tracer = telemetry.tracer
+                if service is not None:
+                    service.tracer = telemetry.tracer
         # pipeline section: trace toggle + named picker-stage overrides
         sched = simulation.scheduler
         pl = cfg.pipeline
@@ -615,7 +674,8 @@ class Platform:
         if pl.logical_start_picker is not None:
             sched.logical_start_stage = \
                 get_stage("logical-start", pl.logical_start_picker)(sched)
-        return cls(cfg, scenario, world, simulation, hub)
+        return cls(cfg, scenario, world, simulation, hub,
+                   telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -681,7 +741,9 @@ __all__ = [
     "Platform", "PlatformConfig", "PlatformConfigError",
     "ClusterSection", "ScenarioSection", "SchedulerSection",
     "ScalingSection", "PredictionSection", "PipelineSection",
-    "SimulationSection", "NodeClassConfig",
+    "SimulationSection", "TelemetrySection", "NodeClassConfig",
+    # telemetry
+    "Telemetry", "publish_result",
     # capability protocols
     "CapacityProvider", "ReleasePicker", "LogicalStartPicker", "Router",
     # decision pipeline

@@ -54,6 +54,7 @@ from .interference import NodeResources
 from .predictor import (N_FEATURES, PerfPredictor,
                         RandomForestRegressor, build_features)
 from .profiles import N_PROFILE, FunctionSpec, ProfileStore
+from ..telemetry.spans import NULL_TRACER
 
 # v1 feature layout (see predictor.build_features)
 _SOLO = 0
@@ -419,6 +420,10 @@ class PredictionService:
         if engine is not None:
             self.set_engine(engine)
         self.stats = EngineStats()
+        #: span tracer for retrain / capacity-solve sections (no-op by
+        #: default; ``Platform.build`` swaps in a real one when
+        #: telemetry is enabled)
+        self.tracer = NULL_TRACER
         self._cache: Dict[SigKey, Tuple[int, int]] = {}  # key -> (epoch, cap)
         self._epoch = predictor.retrain_count
         self._pending_samples = 0
@@ -709,19 +714,23 @@ class PredictionService:
         """Recompute every capacity-table entry of every node in one
         coalesced drain (node-shape-aware under schema v2).  Returns
         total inference rows billed."""
-        mm = m_max or self.cfg.m_max
-        queries: List[_Query] = []
-        owners: List[Tuple[Node, str]] = []
-        for node in nodes:
-            coloc = self.node_coloc(node)
-            for fn in coloc:
-                queries.append((coloc, fn, mm, node.res))
-                owners.append((node, fn))
-        total_rows = 0
-        for (node, fn), (cap, rows) in zip(owners,
-                                           self.solve_many(queries)):
-            node.table[fn] = CapEntry(capacity=cap, fresh=True)
-            total_rows += rows
+        with self.tracer.span("capacity_solve", stats=self.stats) as sp:
+            mm = m_max or self.cfg.m_max
+            queries: List[_Query] = []
+            owners: List[Tuple[Node, str]] = []
+            for node in nodes:
+                coloc = self.node_coloc(node)
+                for fn in coloc:
+                    queries.append((coloc, fn, mm, node.res))
+                    owners.append((node, fn))
+            total_rows = 0
+            for (node, fn), (cap, rows) in zip(owners,
+                                               self.solve_many(queries)):
+                node.table[fn] = CapEntry(capacity=cap, fresh=True)
+                total_rows += rows
+            if sp is not None:
+                sp.attrs["nodes"] = len(nodes)
+                sp.attrs["rows"] = total_rows
         return total_rows
 
     # -- online retraining (the runtime dataset-maintenance loop) ---------
@@ -755,17 +764,21 @@ class PredictionService:
         lookup can see a pre-retrain capacity.  Wall time is billed to
         ``stats.retrain_time_s`` (background work, never the scheduling
         critical path)."""
-        t0 = time.perf_counter()
-        self.predictor.retrain()
-        self._check_epoch()     # epoch bump -> invalidate()
-        if self.cfg.learned_shape_margin:
-            # re-learn margins against the new forest now (background,
-            # billed with the retrain) rather than lazily on the next
-            # capacity solve
-            self.shape_margins()
-        self.stats.retrain_time_s += time.perf_counter() - t0
-        self.stats.retrains += 1
-        self._pending_samples = 0
+        with self.tracer.span("retrain", stats=self.stats) as sp:
+            t0 = time.perf_counter()
+            self.predictor.retrain()
+            self._check_epoch()     # epoch bump -> invalidate()
+            if self.cfg.learned_shape_margin:
+                # re-learn margins against the new forest now
+                # (background, billed with the retrain) rather than
+                # lazily on the next capacity solve
+                self.shape_margins()
+            self.stats.retrain_time_s += time.perf_counter() - t0
+            self.stats.retrains += 1
+            self._pending_samples = 0
+            if sp is not None:
+                sp.attrs["epoch"] = self._epoch
+                sp.attrs["samples"] = self.predictor.n_samples
         for cb in self._retrain_listeners:
             cb(self)
 

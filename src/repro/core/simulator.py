@@ -33,6 +33,7 @@ from .prediction_service import get_schema
 from .profiles import FunctionSpec, ProfileStore
 from .scheduler import BaseScheduler, SchedMetrics
 from .traces import Trace
+from ..telemetry.spans import NULL_TRACER
 
 
 class EqualSplitRouter:
@@ -210,6 +211,10 @@ class Simulation:
         self.cfg = cfg or SimConfig()
         self.router = router or EqualSplitRouter()
         self.events = events or EventHub()
+        #: span tracer for the per-tick scheduling section; the no-op
+        #: default keeps uninstrumented runs on the identical code path
+        #: (spans only read state — see the observer-parity test)
+        self.tracer = NULL_TRACER
         self.cluster = scheduler.cluster
         self._rng = np.random.default_rng(self.cfg.seed)
         if (self.cfg.use_capacity_engine and predictor is not None
@@ -258,8 +263,16 @@ class Simulation:
             # they were queued sub-millisecond work during the previous
             # (idle) second — the paper's "table always up-to-date when
             # scheduling" property (§4.3).
-            self.scheduler.on_tick(now)
-            self.autoscaler.tick(now, rps)
+            with self.tracer.span("schedule") as sp:
+                if sp is not None:
+                    sm = self.scheduler.metrics
+                    d0, p0 = sm.decisions, sm.instances_placed
+                self.scheduler.on_tick(now)
+                self.autoscaler.tick(now, rps)
+                if sp is not None:
+                    sp.attrs["now"] = now
+                    sp.attrs["decisions"] = sm.decisions - d0
+                    sp.attrs["placed"] = sm.instances_placed - p0
             self._measure(now, rps, res)
             if (self.cfg.collect_samples and self.predictor is not None
                     and t % self.cfg.sample_every_s == 0):

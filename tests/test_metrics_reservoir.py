@@ -1,7 +1,19 @@
 """Bounded metric reservoirs: exact aggregates, list-protocol drop-in
-behaviour, and bounded memory on long runs."""
+behaviour, bounded memory on long runs, and the ``histogram(bins)``
+export (property-tested across the exact and estimated regimes).
+
+Property tests run under real `hypothesis` when installed, else under
+the deterministic fallback shim (same assertions, fixed-seed sampled
+inputs)."""
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.core import Reservoir
 from repro.core.scheduler import SchedMetrics
@@ -58,3 +70,73 @@ def test_sched_metrics_expose_exact_percentile_accessors():
     assert m.mean_latency_ms == pytest.approx(26.5)
     assert m.p50_latency_ms == pytest.approx(2.5)
     assert m.p99_latency_ms > 90.0
+
+
+# ---------------------------------------------------------------------------
+# histogram(bins) export
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_empty_and_bad_bins():
+    r = Reservoir(cap=8)
+    counts, edges = r.histogram(bins=5)
+    assert counts.sum() == 0 and len(counts) == 5 and len(edges) == 6
+    with pytest.raises(ValueError):
+        r.histogram(bins=0)
+
+
+def test_histogram_explicit_bounds_clip_like_numpy():
+    r = Reservoir(cap=16)
+    r.extend([1.0, 2.0, 3.0, 100.0])
+    counts, edges = r.histogram(bins=2, lo=0.0, hi=4.0)
+    assert counts.sum() == 3.0            # 100.0 falls outside the range
+    assert edges[0] == 0.0 and edges[-1] == 4.0
+
+
+def test_histogram_degenerate_single_value():
+    r = Reservoir(cap=8)
+    r.extend([7.0, 7.0, 7.0])
+    counts, edges = r.histogram(bins=4)
+    assert counts.sum() == 3.0            # hi==lo widened, nothing lost
+    assert edges[0] == 7.0
+
+
+@settings(max_examples=30)
+@given(values=st.lists(st.integers(min_value=-1000, max_value=1000),
+                       min_size=1, max_size=200),
+       cap=st.integers(min_value=4, max_value=64),
+       bins=st.integers(min_value=1, max_value=20))
+def test_histogram_sum_invariant_both_regimes(values, cap, bins):
+    """Under default bounds the bucket mass always sums to the *exact*
+    observation count — exact regime (count <= cap) bucket-for-bucket,
+    estimated regime (count > cap) by rescaling the retained sample to
+    the population size."""
+    r = Reservoir(cap=cap, seed=1)
+    r.extend(float(v) for v in values)
+    counts, edges = r.histogram(bins=bins)
+    assert len(counts) == bins and len(edges) == bins + 1
+    assert counts.sum() == pytest.approx(r.count)
+    assert (counts >= 0).all()
+    assert edges[0] <= min(values) and edges[-1] >= max(values)
+    if r.count <= cap:
+        # exact regime: identical to numpy over the full history
+        ref, _ = np.histogram([float(v) for v in values], bins=bins,
+                              range=(edges[0], edges[-1]))
+        assert np.array_equal(counts, ref.astype(float))
+
+
+@settings(max_examples=20)
+@given(n=st.integers(min_value=300, max_value=2000),
+       bins=st.integers(min_value=2, max_value=12))
+def test_histogram_estimated_regime_tracks_distribution(n, bins):
+    """Beyond cap the rescaled sample histogram still integrates to the
+    population count and spans the true min/max (tracked exactly)."""
+    rng = np.random.default_rng(7)
+    xs = rng.uniform(0.0, 10.0, size=n)
+    r = Reservoir(cap=128, seed=2)
+    r.extend(xs)
+    counts, edges = r.histogram(bins=bins)
+    assert r.count == n and len(r) == 128
+    assert counts.sum() == pytest.approx(n)
+    assert edges[0] == pytest.approx(float(xs.min()))
+    assert edges[-1] == pytest.approx(float(xs.max()))
