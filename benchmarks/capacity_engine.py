@@ -1,21 +1,31 @@
 """Cluster-scale capacity-solve scaling study: legacy per-node path vs
-the CapacityEngine (coalesced + cached + vectorized), 24 -> 512 nodes.
+the CapacityEngine host drain vs the device-resident fused drain,
+24 -> 4096 nodes.
 
 Each cluster size is populated with nodes drawn from a fixed pool of
 colocation patterns — the regime a real fleet is in, where most nodes
 look like a few dozen archetypes.  For each size we drain the whole
-cluster's capacity tables twice per path:
+cluster's capacity tables per path:
 
   * legacy  — ``update_capacity_table`` node by node (one predictor call
               per (node, function), Python row assembly, full m-sweep)
   * engine  — ``CapacityEngine.update_nodes`` (one coalesced drain:
               a handful of batched predictor calls, signature cache,
               vectorized assembly, chunked early-exit m-sweep)
+  * device  — ``EngineConfig(drain="device")``: the whole drain packed
+              into ONE (S, M, R, F) scenario tensor, the full m-sweep
+              fused into a single forest pass (``rfr_sweep_op``; Pallas
+              on TPU, the jnp gather sweep on CPU), capacities resolved
+              by a device-side gather.  A second (warm) drain shows the
+              steady-state cost once the device cache is populated.
 
-and assert the resulting capacity tables are identical.  The second
-(warm) engine drain shows the steady-state cost once the signature cache
-is populated.  Acceptance target: >= 5x wall-time AND predictor-call
-reduction at 256 nodes, tables equal.
+and assert all resulting capacity tables are identical (the solver's
+bit-compatibility contract).  The legacy O(nodes) path is only run up
+to 512 nodes; the extended sizes (1024, 4096) compare the device drain
+against the host-engine oracle.  Acceptance targets: >= 5x wall-time
+AND predictor-call reduction at 256 nodes; device per-solve latency
+flat in cluster size (log-log slope < 0.5 across the >= 128-node rows,
+recorded as ``device_per_solve_slope`` and gated).
 """
 from __future__ import annotations
 
@@ -33,6 +43,15 @@ from repro.telemetry import RunReport, append_bench
 
 M_MAX = 16
 N_PATTERNS = 24
+#: legacy per-node solving is O(nodes) with Python row assembly — above
+#: this it only burns benchmark time proving the same linearity
+LEGACY_MAX_NODES = 512
+#: device-drain-only extension (vs the host-engine oracle)
+EXTENDED_SIZES = [1024, 4096]
+#: device per-solve latency must stay flat: log-log slope of
+#: us-per-solve vs nodes over the >= SLOPE_MIN_NODES rows
+SLOPE_MAX = 0.5
+SLOPE_MIN_NODES = 100
 
 
 def _pattern_pool(specs, rng, n_patterns: int):
@@ -70,6 +89,13 @@ def _clear(nodes):
         n.table.clear()
 
 
+def _device_engine() -> str:
+    """Pallas kernel on TPU; the jnp gather sweep on CPU (interpret-mode
+    Pallas would benchmark the emulator, not the drain)."""
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "jax"
+
+
 def run(quick: bool = False, bench: bool = False):
     """``bench=True`` (the driver/__main__ path) persists a
     ``RunReport`` into ``BENCH_capacity_engine.json`` for the
@@ -78,21 +104,26 @@ def run(quick: bool = False, bench: bool = False):
     world = build_world(n_synthetic=6)
     pred = world.predictor
     sizes = [24, 128, 256] if quick else [24, 64, 128, 256, 512]
+    all_sizes = sizes + EXTENDED_SIZES
+    dev_engine = _device_engine()
     rows = []
-    for n_nodes in sizes:
+    for n_nodes in all_sizes:
         nodes = _build_nodes(world.specs, n_nodes, seed=n_nodes)
+        run_legacy = n_nodes <= LEGACY_MAX_NODES
 
-        # -- legacy: per-node, per-function solves ---------------------
-        calls0, rows0 = pred.inference_calls, pred.inference_count
-        t0 = time.perf_counter()
-        for node in nodes:
-            update_capacity_table(pred, world.store, world.qos,
-                                  world.specs, node, m_max=M_MAX)
-        legacy_s = time.perf_counter() - t0
-        legacy_calls = pred.inference_calls - calls0
-        legacy_rows = pred.inference_count - rows0
-        ref = _tables(nodes)
-        _clear(nodes)
+        legacy_s = legacy_calls = legacy_rows = None
+        if run_legacy:
+            # -- legacy: per-node, per-function solves -----------------
+            calls0, rows0 = pred.inference_calls, pred.inference_count
+            t0 = time.perf_counter()
+            for node in nodes:
+                update_capacity_table(pred, world.store, world.qos,
+                                      world.specs, node, m_max=M_MAX)
+            legacy_s = time.perf_counter() - t0
+            legacy_calls = pred.inference_calls - calls0
+            legacy_rows = pred.inference_count - rows0
+            ref = _tables(nodes)
+            _clear(nodes)
 
         # -- engine: one coalesced drain, cold cache -------------------
         engine = CapacityEngine(pred, world.store, world.qos, world.specs,
@@ -104,7 +135,10 @@ def run(quick: bool = False, bench: bool = False):
         engine_calls = pred.inference_calls - calls0
         engine_rows = pred.inference_count - rows0
         got = _tables(nodes)
-        assert got == ref, f"capacity tables diverged at {n_nodes} nodes"
+        if run_legacy:
+            assert got == ref, f"capacity tables diverged at {n_nodes} nodes"
+        else:
+            ref = got               # host engine is the oracle out here
         _clear(nodes)
 
         # -- engine again: warm signature cache ------------------------
@@ -112,18 +146,52 @@ def run(quick: bool = False, bench: bool = False):
         engine.update_nodes(nodes, m_max=M_MAX)
         warm_s = time.perf_counter() - t0
         assert _tables(nodes) == ref, "warm-cache tables diverged"
+        _clear(nodes)
 
+        # -- device: fused single-pass m-sweep -------------------------
+        device = CapacityEngine(pred, world.store, world.qos, world.specs,
+                                EngineConfig(m_max=M_MAX, drain="device"))
+        prev_engine = pred.engine
+        pred.engine = dev_engine
+        try:
+            # warm the jit/Pallas compile for this size's padded shape,
+            # then invalidate so the timed drain re-solves everything
+            device.update_nodes(nodes, m_max=M_MAX)
+            _clear(nodes)
+            device.invalidate()
+            t0 = time.perf_counter()
+            device.update_nodes(nodes, m_max=M_MAX)
+            device_s = time.perf_counter() - t0
+            assert _tables(nodes) == ref, \
+                f"device capacity tables diverged at {n_nodes} nodes"
+            device_calls = device.stats.predict_calls // 2  # minus warm-up
+            _clear(nodes)
+            t0 = time.perf_counter()
+            device.update_nodes(nodes, m_max=M_MAX)
+            device_warm_s = time.perf_counter() - t0
+            assert _tables(nodes) == ref, "warm device tables diverged"
+        finally:
+            pred.engine = prev_engine
+
+        scenarios = sum(len(t) for t in ref)
         rows.append({
             "nodes": n_nodes,
-            "scenarios": sum(len(t) for t in ref),
-            "legacy_ms": round(legacy_s * 1e3, 2),
+            "scenarios": scenarios,
+            "legacy_ms": round(legacy_s * 1e3, 2) if run_legacy else None,
             "engine_ms": round(engine_s * 1e3, 2),
             "warm_ms": round(warm_s * 1e3, 2),
-            "speedup": round(legacy_s / max(engine_s, 1e-9), 2),
-            "warm_speedup": round(legacy_s / max(warm_s, 1e-9), 2),
+            "device_ms": round(device_s * 1e3, 2),
+            "device_warm_ms": round(device_warm_s * 1e3, 2),
+            "device_us_per_solve": round(device_s * 1e6 / scenarios, 2),
+            "speedup": round(legacy_s / max(engine_s, 1e-9), 2)
+            if run_legacy else None,
+            "warm_speedup": round(legacy_s / max(warm_s, 1e-9), 2)
+            if run_legacy else None,
             "legacy_calls": legacy_calls,
             "engine_calls": engine_calls,
-            "call_reduction": round(legacy_calls / max(engine_calls, 1), 1),
+            "device_calls": device_calls,
+            "call_reduction": round(legacy_calls / max(engine_calls, 1), 1)
+            if run_legacy else None,
             "legacy_rows": legacy_rows,
             "engine_rows": engine_rows,
             "unique_solves": engine.stats.unique_solves,
@@ -133,8 +201,23 @@ def run(quick: bool = False, bench: bool = False):
         })
         emit(rows[-1:])
 
+    # device scaling law: per-solve latency vs cluster size (log-log).
+    # <= 0 means flat-or-amortizing; SLOPE_MAX bounds regressions.
+    fit = [(r["nodes"], r["device_us_per_solve"]) for r in rows
+           if r["nodes"] >= SLOPE_MIN_NODES]
+    slope = float(np.polyfit(np.log([n for n, _ in fit]),
+                             np.log([u for _, u in fit]), 1)[0]) \
+        if len(fit) >= 2 else 0.0
+    assert slope < SLOPE_MAX, \
+        f"device per-solve latency grows with cluster size " \
+        f"(log-log slope {slope:.3f} >= {SLOPE_MAX})"
+    print(f"# device per-solve slope ({len(fit)} sizes >= "
+          f"{SLOPE_MIN_NODES} nodes, engine={dev_engine}): {slope:.3f} "
+          f"=> {'PASS' if slope < SLOPE_MAX else 'FAIL'}")
+
     save_artifact("capacity_engine_scaling", {"m_max": M_MAX,
                                               "n_patterns": N_PATTERNS,
+                                              "device_engine": dev_engine,
                                               "rows": rows})
     at256 = [r for r in rows if r["nodes"] == 256]
     if at256:
@@ -145,14 +228,17 @@ def run(quick: bool = False, bench: bool = False):
               f"({r['call_reduction']}x) tables_equal={r['tables_equal']} "
               f"=> {'PASS' if ok else 'FAIL'}")
     if bench:
-        top = rows[-1]
+        top = [r for r in rows if r["speedup"] is not None][-1]
         report = RunReport.build(
             "capacity_engine", mode="quick" if quick else "full",
             manifest={"m_max": M_MAX, "n_patterns": N_PATTERNS,
-                      "sizes": sizes},
+                      "sizes": all_sizes, "device_engine": dev_engine},
             metrics={"speedup_max_size": top["speedup"],
                      "warm_speedup_max_size": top["warm_speedup"],
                      "call_reduction_max_size": top["call_reduction"],
+                     "device_per_solve_slope": round(slope, 4),
+                     "device_us_per_solve_max_size":
+                         rows[-1]["device_us_per_solve"],
                      "tables_equal_all": all(r["tables_equal"]
                                              for r in rows)},
             rows=rows)

@@ -5,12 +5,18 @@
 #   scripts/verify.sh --bench    benchmark regression gate only: run the
 #                                quick large-cluster + capacity-engine
 #                                studies (persisting RunReports into the
-#                                repo-root BENCH_*.json trajectories),
-#                                then diff the fresh runs against the
-#                                checked-in baselines
+#                                repo-root BENCH_*.json trajectories;
+#                                capacity-engine extends to 4096 nodes
+#                                through the device-resident fused
+#                                drain), then diff the fresh runs
+#                                against the checked-in baselines
 #                                (python -m repro.telemetry.gate; exits
 #                                non-zero with a delta table on any
-#                                density/QoS/latency regression), and
+#                                density/QoS/latency regression, on a
+#                                numpy-vs-device capacity-table parity
+#                                break, or when the device per-solve-
+#                                latency-vs-nodes log-log slope exceeds
+#                                the baseline + slope tolerance), and
 #                                render the self-contained HTML
 #                                dashboard from the trajectories + the
 #                                runs' JSONL event streams

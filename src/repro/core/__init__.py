@@ -14,7 +14,8 @@ from .pipeline import (CandidatePass, DecisionContext, DecisionTrace,
                        PipelineOwlScheduler, SchedulingPipeline,
                        TraceBinding)
 from .metrics import Reservoir
-from .prediction_service import (SCHEMA_V1, SCHEMA_V2, CapacityEngine,
+from .prediction_service import (DRAIN_MODES, INFERENCE_ENGINES,
+                                 SCHEMA_V1, SCHEMA_V2, CapacityEngine,
                                  EngineConfig, EngineStats, FeatureSchema,
                                  PredictionService, coloc_signature,
                                  get_schema)
@@ -52,6 +53,7 @@ __all__ = [
     "get_trace", "register_trace", "registered_traces",
     "CapacityEngine", "EngineConfig", "EngineStats", "coloc_signature",
     "PredictionService", "FeatureSchema", "SCHEMA_V1", "SCHEMA_V2",
+    "DRAIN_MODES", "INFERENCE_ENGINES",
     "get_schema", "Reservoir", "replay_trace",
     "capacity_of", "update_capacity_table", "CapEntry", "Cluster",
     "FuncState", "Node", "GroundTruth", "NodeResources", "MODEL_ZOO",

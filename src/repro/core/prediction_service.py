@@ -43,7 +43,7 @@ parity tests and the 24->512-node benchmark both assert it.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -70,6 +70,12 @@ REFERENCE_NODE = NodeResources()
 N_SHAPE_FEATURES = 2   # normalized (cpu_mcores, mem_mb) of the host node
 
 INFERENCE_ENGINES = ("numpy", "jax", "pallas")
+
+#: capacity-drain strategies: "host" is the chunked early-exit m-sweep
+#: (numpy rows shipped to the predictor once per chunk round), "device"
+#: the fused single-pass sweep (one padded scenario tensor, one
+#: ``rfr_sweep_op`` launch, capacities gathered device-side)
+DRAIN_MODES = ("host", "device")
 
 Coloc = Dict[str, Tuple[float, float]]
 SigKey = Tuple
@@ -232,6 +238,27 @@ class EngineConfig:
     margin_quantile: float = 0.9   # validation-error quantile per shape
     margin_cap: float = 0.5        # learned margins are clamped to
     #                                [qos_margin_base, margin_cap]
+    # capacity-drain strategy: "host" (chunked early-exit m-sweep) or
+    # "device" (fused single-pass Pallas/jnp sweep, see solve_many)
+    drain: str = "host"
+
+    def __post_init__(self):
+        if self.chunk_init < 1:
+            raise ValueError(
+                f"chunk_init must be >= 1 (got {self.chunk_init}): an "
+                "empty first chunk never advances the m-sweep, so "
+                "solve_many's drain loop would spin forever")
+        if self.chunk_growth < 1:
+            raise ValueError(
+                f"chunk_growth must be >= 1 (got {self.chunk_growth}): "
+                "shrinking chunks decay to empty before m_max and the "
+                "drain loop never terminates")
+        if self.max_cache_entries < 1:
+            raise ValueError("max_cache_entries must be >= 1 "
+                             f"(got {self.max_cache_entries})")
+        if self.drain not in DRAIN_MODES:
+            raise ValueError(f"unknown drain mode {self.drain!r} "
+                             f"(have {DRAIN_MODES})")
 
 
 @dataclass
@@ -410,12 +437,16 @@ class PredictionService:
                  qos: QoSStore, specs: Dict[str, FunctionSpec],
                  cfg: Optional[EngineConfig] = None, *,
                  schema: Union[int, FeatureSchema, None] = None,
-                 engine: Optional[str] = None):
+                 engine: Optional[str] = None,
+                 drain: Optional[str] = None):
         self.predictor = predictor
         self.store = store
         self.qos = qos
         self.specs = specs
         self.cfg = cfg or EngineConfig()
+        if drain is not None:
+            # keyword override without mutating a caller-shared config
+            self.cfg = replace(self.cfg, drain=drain)
         self.schema = get_schema(schema)
         if engine is not None:
             self.set_engine(engine)
@@ -425,6 +456,11 @@ class PredictionService:
         #: telemetry is enabled)
         self.tracer = NULL_TRACER
         self._cache: Dict[SigKey, Tuple[int, int]] = {}  # key -> (epoch, cap)
+        # device-resident signature cache: solved capacities live in one
+        # growing device vector; repeat signatures resolve as a gather
+        self._dev_slots: Dict[SigKey, int] = {}          # key -> slot index
+        self._dev_caps = None                            # jnp (n_slots,) i32
+        self._interpret: Optional[bool] = None           # pallas off-TPU
         self._epoch = predictor.retrain_count
         self._pending_samples = 0
         self._retrain_listeners: List = []
@@ -513,6 +549,8 @@ class PredictionService:
         state the signatures cannot see has changed)."""
         if self._cache:
             self._cache.clear()
+        self._dev_slots.clear()
+        self._dev_caps = None
         self._shape_margins = None   # re-learn against the new forest
         self.stats.cache_epochs += 1
 
@@ -538,6 +576,18 @@ class PredictionService:
             del self._cache[key]
             return None
         return cap
+
+    def _cache_put(self, key: SigKey, cap: int):
+        """Insert one solved capacity, evicting oldest-first (dict
+        insertion order) at ``max_cache_entries`` — the wholesale
+        ``clear()`` this replaces dropped every warm entry the moment
+        the bound was hit, triggering a cluster-wide re-solve storm."""
+        if not self.cfg.cache:
+            return
+        if key not in self._cache:
+            while len(self._cache) >= self.cfg.max_cache_entries:
+                self._cache.pop(next(iter(self._cache)))
+        self._cache[key] = (self._epoch, cap)
 
     def shape_margins(self) -> Dict[Tuple[float, ...], float]:
         """Per-shape QoS margins learned from per-shape *validation*
@@ -642,11 +692,18 @@ class PredictionService:
         """Solve many (coloc, fn, m_max[, node_res]) scenarios with
         coalesced batched inference.  Duplicate signatures within the
         batch are solved once; rows are billed to the first occurrence
-        only."""
+        only.
+
+        ``cfg.drain`` selects the strategy: the chunked host m-sweep
+        below, or the device-resident fused sweep
+        (``_solve_many_device``) — one padded scenario tensor, one
+        kernel pass, no per-chunk host round trips."""
         norm: List[_Query] = [q if len(q) == 4 else (*q, None)
                               for q in queries]
         self._check_epoch()
         self.stats.solves += len(norm)
+        if self.cfg.drain == "device":
+            return self._solve_many_device(norm)
         results: List[Optional[Tuple[int, int]]] = [None] * len(norm)
         unique: Dict[SigKey, _Solve] = {}
         assignment: List[Optional[SigKey]] = [None] * len(norm)
@@ -687,10 +744,7 @@ class PredictionService:
             size *= self.cfg.chunk_growth
 
         for key, s in unique.items():
-            if self.cfg.cache:
-                if len(self._cache) >= self.cfg.max_cache_entries:
-                    self._cache.clear()
-                self._cache[key] = (self._epoch, s.capacity)
+            self._cache_put(key, s.capacity)
         billed: set = set()
         for i, key in enumerate(assignment):
             if key is None:
@@ -699,6 +753,141 @@ class PredictionService:
             results[i] = (s.capacity, 0 if key in billed else s.rows)
             billed.add(key)
         return results  # type: ignore[return-value]
+
+    # -- device-resident drain (the fused Pallas/jnp m-sweep) -------------
+
+    def _pallas_interpret(self) -> bool:
+        """Pallas kernels run compiled on TPU, interpret-mode anywhere
+        else (the CPU validation path)."""
+        if self._interpret is None:
+            try:
+                import jax
+                self._interpret = jax.default_backend() != "tpu"
+            except Exception:          # pragma: no cover - no jax at all
+                self._interpret = True
+        return self._interpret
+
+    def _solve_many_device(self, norm: List[_Query]
+                           ) -> List[Tuple[int, int]]:
+        """Device-resident capacity solving: the whole drain's candidate
+        feature matrix is assembled as ONE padded (S, M, R, F) jnp
+        tensor and the full m-sweep runs in a single fused forest pass
+        (``kernels.ops.rfr_sweep_op``) that returns max-admissible m per
+        scenario — no host round-trip per chunk, host work O(unique
+        signatures) instead of O(nodes x chunk rounds).
+
+        Row assembly stays in the float64 numpy ``_Template.build`` —
+        the solver's bit-compatibility contract (device rows are the
+        host oracle's rows, so capacity tables are bit-identical by
+        construction); everything after the one transfer — forest
+        descent, QoS comparison, the running all-pass reduction over m,
+        and cached-capacity resolution (a gather over the device-side
+        capacity vector keyed by colocation signature) — is
+        device-resident and jitted.  ``predictor.engine == "pallas"``
+        routes to the fused Pallas kernel, anything else to the jnp
+        gather sweep."""
+        from ..kernels import ops
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        n = len(norm)
+        if n == 0:
+            return []
+        persist = self.cfg.cache
+        # next free slot = device-vector length, NOT len(_dev_slots):
+        # re-solves (host entry evicted) overwrite their slot and leave
+        # an orphan element behind, so the dict can run shorter than
+        # the vector — handing out len(_dev_slots) would collide
+        base = int(self._dev_caps.shape[0]) \
+            if persist and self._dev_caps is not None else 0
+        # key -> (template, m_max, slot, first query index)
+        new: Dict[SigKey, Tuple[_Template, int, int, int]] = {}
+        slot_ids = np.zeros(n, np.int32)
+        first_rows = [0] * n
+        for i, (coloc, fn, m_max, node_res) in enumerate(norm):
+            key = self.signature(coloc, fn, m_max, node_res)
+            if persist:
+                slot = self._dev_slots.get(key)
+                if slot is not None and self._cache_get(key) is not None:
+                    slot_ids[i] = slot
+                    self.stats.cache_hits += 1
+                    continue
+            ent = new.get(key)
+            if ent is not None:
+                self.stats.coalesced_dupes += 1
+                slot_ids[i] = ent[2]
+                continue
+            tmpl = _Template(self.store, self.qos, self.specs, coloc, fn,
+                             self.schema, node_res,
+                             self.qos_bound_scale(node_res))
+            slot = base + len(new)
+            new[key] = (tmpl, m_max, slot, i)
+            slot_ids[i] = slot
+            first_rows[i] = max(m_max, 0) * tmpl.rows_per_m
+            self.stats.unique_solves += 1
+
+        caps_new = None
+        if new:
+            with self.tracer.span("device_sweep", stats=self.stats) as sp:
+                F = self.schema.n_features
+                S = len(new)
+                Mp = max(max(mm for _t, mm, _s, _i in new.values()), 1)
+                Rp = max(t.rows_per_m for t, _mm, _s, _i in new.values())
+                X = np.zeros((S, Mp, Rp, F), np.float32)
+                # +inf bound = padded row, passes; -inf = past this
+                # scenario's own m_max, fails (capacity capped there)
+                B = np.full((S, Mp, Rp), np.inf, np.float32)
+                rows_built = 0
+                for j, (tmpl, mm, _slot, _i) in enumerate(new.values()):
+                    R = tmpl.rows_per_m
+                    if mm > 0:
+                        rows, bounds = tmpl.build(np.arange(1, mm + 1))
+                        X[j, :mm, :R, :] = rows.reshape(mm, R, F)
+                        B[j, :mm, :R] = bounds.reshape(mm, R)
+                    B[j, max(mm, 0):, :] = -np.inf
+                    rows_built += max(mm, 0) * R
+                feat, thr, leaf = self.predictor.model.device_arrays()
+                caps_new = ops.rfr_sweep_op(
+                    jnp.asarray(X), jnp.asarray(B), feat, thr, leaf,
+                    use_pallas=(self.predictor.engine == "pallas"),
+                    interpret=self._pallas_interpret(),
+                    log_target=self.predictor.log_target)
+                self.stats.rows_built += rows_built
+                self.stats.predict_calls += 1
+                if sp is not None:
+                    sp.attrs["scenarios"] = S
+                    sp.attrs["rows"] = rows_built
+                    sp.attrs["padded_shape"] = [S, Mp, Rp, F]
+            if persist:
+                self._dev_caps = caps_new if self._dev_caps is None \
+                    else jnp.concatenate([self._dev_caps, caps_new])
+
+        # resolve every query with one device-side gather
+        all_caps = self._dev_caps if persist else caps_new
+        caps_host = np.asarray(jnp.take(all_caps, jnp.asarray(slot_ids)))
+        if persist:
+            for key, (_t, _mm, slot, i) in new.items():
+                self._dev_slots[key] = slot
+                self._cache_put(key, int(caps_host[i]))
+            self._dev_evict()
+        if new:
+            self.predictor.record_inference(
+                rows_built, time.perf_counter() - t0)
+        return [(int(caps_host[i]), first_rows[i]) for i in range(n)]
+
+    def _dev_evict(self):
+        """Bound the device capacity vector like the host cache: drop
+        oldest slots past ``max_cache_entries`` and compact the
+        survivors with one gather."""
+        import jax.numpy as jnp
+        excess = len(self._dev_slots) - self.cfg.max_cache_entries
+        if excess <= 0:
+            return
+        keep = list(self._dev_slots)[excess:]
+        idx = jnp.asarray(np.asarray(
+            [self._dev_slots[k] for k in keep], np.int32))
+        self._dev_caps = jnp.take(self._dev_caps, idx)
+        self._dev_slots = {k: i for i, k in enumerate(keep)}
 
     # -- node-level API (the async-update path) ---------------------------
 

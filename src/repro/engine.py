@@ -8,11 +8,13 @@ inference-engine selection (numpy / jax / pallas), and epoch/retrain
 bookkeeping — see ``repro.core.prediction_service``.  ``CapacityEngine``
 is the PR-1 name for the same class, kept as a true alias.
 """
-from .core.prediction_service import (SCHEMA_V1, SCHEMA_V2, CapacityEngine,
+from .core.prediction_service import (DRAIN_MODES, INFERENCE_ENGINES,
+                                      SCHEMA_V1, SCHEMA_V2, CapacityEngine,
                                       EngineConfig, EngineStats,
                                       FeatureSchema, PredictionService,
                                       coloc_signature, get_schema)
 
 __all__ = ["CapacityEngine", "PredictionService", "EngineConfig",
            "EngineStats", "FeatureSchema", "SCHEMA_V1", "SCHEMA_V2",
+           "DRAIN_MODES", "INFERENCE_ENGINES",
            "get_schema", "coloc_signature"]

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention
-from .rfr_inference import rfr_forest_apply
+from .rfr_inference import rfr_capacity_sweep, rfr_forest_apply
 from .rglru_scan import rglru_scan
 from .ssd_scan import ssd_scan
 
@@ -66,16 +66,11 @@ def ssd_op(x, dt, A, Bm, Cm, h0=None, *, chunk=256, use_pallas=True,
     return y.transpose(0, 2, 1, 3), h
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def rfr_op(x, feat, thr, leaf, *, use_pallas=True, interpret=True):
-    """Forest inference: x (N, F) -> (N,) predictions.
-
-    ``use_pallas=False`` is the pure-jnp gather engine (the predictor's
-    ``engine="jax"``): level-synchronous descent with vectorized gathers,
-    traceable under jit — the numpy ``ref.rfr_forest_ref`` oracle cannot
-    run inside a traced function."""
-    if use_pallas:
-        return rfr_forest_apply(x, feat, thr, leaf, interpret=interpret)
+def _forest_gather(x, feat, thr, leaf):
+    """Pure-jnp level-synchronous forest descent (the predictor's
+    ``engine="jax"``): vectorized gathers, traceable under jit — the
+    numpy ``ref.rfr_forest_ref`` oracle cannot run inside a traced
+    function.  x (N, F) -> (N,) f32."""
     N = x.shape[0]
     T, NN = feat.shape
     depth = (NN + 1).bit_length() - 1
@@ -89,3 +84,37 @@ def rfr_op(x, feat, thr, leaf, *, use_pallas=True, interpret=True):
         idx = 2 * idx + 1 + go_right
     vals = leaf[t_ids, idx - NN]
     return jnp.mean(vals, axis=1).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def rfr_op(x, feat, thr, leaf, *, use_pallas=True, interpret=True):
+    """Forest inference: x (N, F) -> (N,) predictions."""
+    if use_pallas:
+        return rfr_forest_apply(x, feat, thr, leaf, interpret=interpret)
+    return _forest_gather(x, feat, thr, leaf)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "log_target"))
+def rfr_sweep_op(x, bounds, feat, thr, leaf, *, use_pallas=True,
+                 interpret=True, log_target=False):
+    """Fused capacity m-sweep: the device-resident drain's one pass.
+
+    x (S, M, R, F) padded scenario feature rows; bounds (S, M, R) with
+    +inf = padded row (always passes) and -inf = m beyond a scenario's
+    m_max (always fails).  Returns (S,) int32 max-admissible m.
+    ``use_pallas=False`` runs the same sweep as jnp gathers + reductions
+    (the ``engine="jax"`` device path and the kernel's traced oracle)."""
+    if use_pallas:
+        return rfr_capacity_sweep(x, bounds, feat, thr, leaf,
+                                  interpret=interpret,
+                                  log_target=log_target)
+    S, M, R, F = x.shape
+    if S == 0 or M == 0 or R == 0:
+        return jnp.zeros((S,), jnp.int32)
+    preds = _forest_gather(x.reshape(S * M * R, F), feat, thr, leaf)
+    if log_target:
+        preds = jnp.exp(preds)
+    ok = (preds <= bounds.reshape(-1)).reshape(S, M, R)
+    m_ok = jnp.min(ok.astype(jnp.int32), axis=2)         # (S, M)
+    fails = jnp.cumsum(1 - m_ok, axis=1)
+    return jnp.sum((fails == 0).astype(jnp.int32), axis=1).astype(jnp.int32)

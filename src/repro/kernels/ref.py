@@ -97,3 +97,27 @@ def rfr_forest_ref(x, feat, thr, leaf):
             acc += leaf[t, idx - NN]
         out[n] = acc / T
     return jnp.asarray(out)
+
+
+def rfr_capacity_sweep_ref(x, bounds, feat, thr, leaf,
+                           log_target: bool = False):
+    """Scalar-loop oracle for the fused capacity m-sweep: descend every
+    (scenario, m, row) feature vector, compare against its QoS bound
+    (+inf rows pass, -inf rows fail), and count the longest passing
+    prefix of m per scenario.  Returns (S,) int32."""
+    import numpy as np
+    x = np.asarray(x)
+    bounds = np.asarray(bounds)
+    S, M, R, F = x.shape
+    preds = np.asarray(rfr_forest_ref(x.reshape(S * M * R, F), feat, thr,
+                                      leaf)).reshape(S, M, R)
+    if log_target:
+        preds = np.exp(preds)
+    caps = np.zeros(S, np.int32)
+    for s in range(S):
+        for m in range(M):
+            if np.all(preds[s, m] <= bounds[s, m]):
+                caps[s] = m + 1
+            else:
+                break
+    return jnp.asarray(caps)

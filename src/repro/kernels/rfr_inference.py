@@ -1,4 +1,4 @@
-"""Random-Forest-Regression batched inference — Pallas TPU kernel.
+"""Random-Forest-Regression batched inference — Pallas TPU kernels.
 
 This is the paper's scheduling-latency hot spot (Table 2: model inference
 ~20 ms dominates cold starts once container init is <10 ms; Jiagu needs
@@ -14,6 +14,20 @@ Descent is D unrolled levels of   idx = 2*idx + 1 + (x[feat[idx]] >= thr)
 vectorized over (block_n inputs x T trees) — gathers over VMEM-resident
 arrays.  Output is the tree-mean prediction.
 
+Two kernels share the descent:
+
+  * ``rfr_forest_apply`` — plain batched prediction, (N, F) -> (N,).
+  * ``rfr_capacity_sweep`` — the fused capacity m-sweep.  Input is the
+    padded scenario tensor (S, M, R, F): S capacity scenarios, M swept
+    concurrencies, R feature rows per concurrency (target + colocated
+    neighbors).  One pass descends every row, compares predictions
+    against the per-row QoS bounds, reduces (all rows pass) over R and
+    (running prefix of passing m) over M, and returns the max admissible
+    m per scenario as (S,) int32 — no host round-trip per chunk.
+    Padding is encoded in the bounds: +inf rows always pass (R padding),
+    -inf rows always fail (m beyond a scenario's own m_max, capping its
+    capacity there).
+
 The un-jitted numpy training half lives in ``repro.core.predictor``.
 """
 from __future__ import annotations
@@ -25,40 +39,48 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, feat_ref, thr_ref, leaf_ref, out_ref, *, depth: int,
-            n_trees: int, block_n: int, n_feat: int):
-    x = x_ref[...]                                  # (bn, F)
-    feat = feat_ref[...].reshape(-1)                # (T * NN,)
-    thr = thr_ref[...].reshape(-1)
-    leaf = leaf_ref[...].reshape(-1)                # (T * NL,)
+def _descend(x, feat, thr, leaf, *, depth: int, n_trees: int,
+             block_n: int, n_feat: int):
+    """Shared VMEM forest descent: x (bn, F) -> tree-mean preds (bn,).
+    feat/thr/leaf arrive flattened to 1-D."""
     NN = (1 << depth) - 1
     NL = 1 << depth
-
     tree_ids = jax.lax.broadcasted_iota(jnp.int32, (block_n, n_trees), 1)
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (block_n, n_trees), 0)
     idx = jnp.zeros((block_n, n_trees), jnp.int32)
     x_flat = x.reshape(-1)                          # (bn * F,)
-
     for _ in range(depth):
         node = tree_ids * NN + idx
         f = jnp.take(feat, node, axis=0)            # (bn, T)
         t = jnp.take(thr, node, axis=0)
         xv = jnp.take(x_flat, row_ids * n_feat + f, axis=0)
         idx = 2 * idx + 1 + (xv >= t).astype(jnp.int32)
-
     leaf_idx = tree_ids * NL + (idx - NN)
     vals = jnp.take(leaf, leaf_idx, axis=0)         # (bn, T)
-    out_ref[:, 0] = jnp.mean(vals, axis=1)
+    return jnp.mean(vals, axis=1)
+
+
+def _kernel(x_ref, feat_ref, thr_ref, leaf_ref, out_ref, *, depth: int,
+            n_trees: int, block_n: int, n_feat: int):
+    preds = _descend(x_ref[...], feat_ref[...].reshape(-1),
+                     thr_ref[...].reshape(-1), leaf_ref[...].reshape(-1),
+                     depth=depth, n_trees=n_trees, block_n=block_n,
+                     n_feat=n_feat)
+    out_ref[:, 0] = preds
 
 
 def rfr_forest_apply(x, feat, thr, leaf, *, block_n: int = 256,
                      interpret: bool = False):
     """x: (N, F) f32; feat/thr: (T, 2^D-1); leaf: (T, 2^D).
-    Returns predictions (N,) f32."""
+    Returns predictions (N,) f32.  Handles N == 0 (empty drain),
+    N < block_n, and N not a multiple of block_n (zero-padded grid)."""
     N, F = x.shape
     T, NN = feat.shape
     depth = (NN + 1).bit_length() - 1
     assert (1 << depth) - 1 == NN, "complete tree layout required"
+    if N == 0:
+        # bn would be 0 and grid=(N // bn,) a division by zero
+        return jnp.zeros((0,), jnp.float32)
     bn = min(block_n, N)
     pad = (-N) % bn
     if pad:
@@ -81,3 +103,77 @@ def rfr_forest_apply(x, feat, thr, leaf, *, block_n: int = 256,
         interpret=interpret,
     )(x, feat, thr, leaf)
     return out[:N, 0]
+
+
+def _sweep_kernel(x_ref, b_ref, feat_ref, thr_ref, leaf_ref, out_ref, *,
+                  depth: int, n_trees: int, block_s: int, m_count: int,
+                  rows_per_m: int, n_feat: int, log_target: bool):
+    bn = block_s * m_count * rows_per_m
+    x = x_ref[...].reshape(bn, n_feat)
+    bounds = b_ref[...].reshape(bn)
+    preds = _descend(x, feat_ref[...].reshape(-1),
+                     thr_ref[...].reshape(-1), leaf_ref[...].reshape(-1),
+                     depth=depth, n_trees=n_trees, block_n=bn,
+                     n_feat=n_feat)
+    if log_target:
+        preds = jnp.exp(preds)
+    ok = (preds <= bounds).reshape(block_s, m_count, rows_per_m)
+    # all R rows of a concurrency must meet QoS; capacity is the longest
+    # passing prefix of m = 1..M (a failing m caps every later m, exactly
+    # the host sweep's early-exit semantics)
+    m_ok = jnp.min(ok.astype(jnp.int32), axis=2)          # (bs, M)
+    fails = jnp.cumsum(1 - m_ok, axis=1)
+    caps = jnp.sum((fails == 0).astype(jnp.int32), axis=1)
+    out_ref[:, 0] = caps
+
+
+def rfr_capacity_sweep(x, bounds, feat, thr, leaf, *, block_s: int = 0,
+                       interpret: bool = False, log_target: bool = False):
+    """Fused capacity m-sweep: one Pallas pass over the whole padded
+    scenario tensor.
+
+    x: (S, M, R, F) f32 feature rows; bounds: (S, M, R) f32 QoS bounds
+    (+inf = padded row, always passes; -inf = m beyond the scenario's
+    m_max, always fails); feat/thr/leaf: the flattened forest.  With
+    ``log_target`` predictions are exponentiated before the bound
+    comparison (the predictor's log-latency regression).  Returns
+    (S,) int32 — the max admissible concurrency per scenario.
+    """
+    S, M, R, F = x.shape
+    T, NN = feat.shape
+    depth = (NN + 1).bit_length() - 1
+    assert (1 << depth) - 1 == NN, "complete tree layout required"
+    if S == 0 or M == 0 or R == 0:
+        return jnp.zeros((S,), jnp.int32)
+    if block_s <= 0:
+        # target ~512 feature rows per launch, at least one scenario
+        block_s = max(1, 512 // (M * R))
+    bs = min(block_s, S)
+    pad = (-S) % bs
+    x2 = x.reshape(S, M * R * F)
+    b2 = bounds.reshape(S, M * R)
+    if pad:
+        x2 = jnp.pad(x2, [(0, pad), (0, 0)])
+        # padded scenarios pass trivially (+inf) and are sliced off
+        b2 = jnp.pad(b2, [(0, pad), (0, 0)],
+                     constant_values=jnp.float32(jnp.inf))
+    Sp = x2.shape[0]
+
+    kernel = functools.partial(_sweep_kernel, depth=depth, n_trees=T,
+                               block_s=bs, m_count=M, rows_per_m=R,
+                               n_feat=F, log_target=log_target)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Sp // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, M * R * F), lambda i: (i, 0)),
+            pl.BlockSpec((bs, M * R), lambda i: (i, 0)),
+            pl.BlockSpec((T, NN), lambda i: (0, 0)),
+            pl.BlockSpec((T, NN), lambda i: (0, 0)),
+            pl.BlockSpec((T, 1 << depth), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, 1), jnp.int32),
+        interpret=interpret,
+    )(x2, b2, feat, thr, leaf)
+    return out[:S, 0]

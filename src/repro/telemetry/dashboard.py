@@ -416,7 +416,9 @@ def _trajectory_panel(study: str, bench: Dict[str, Any],
         for r in rows:
             if "density" in r and "system" in r:
                 out[r["system"]].append(float(r["density"]))
-            elif "speedup" in r:
+            elif r.get("speedup") is not None:
+                # device-drain-only rows (legacy path not run at that
+                # size) carry speedup=None and don't enter the mean
                 out["engine speedup"].append(float(r["speedup"]))
         return {k: sum(v) / len(v) for k, v in out.items() if v}
 
@@ -555,16 +557,21 @@ def render(root: Optional[str] = None, events_dir: Optional[str] = None,
     ce = benches.get("capacity_engine")
     if ce:
         rows = _latest(ce).get("rows", [])
-        items = [(f"{r['nodes']} nodes", float(r.get("speedup", 0)),
-                  f"{r.get('speedup', 0)}x cold / "
+        # device-drain-only rows (legacy skipped past its node cap)
+        # have speedup=None: shown in the table, left out of the bars
+        items = [(f"{r['nodes']} nodes", float(r["speedup"]),
+                  f"{r['speedup']}x cold / "
                   f"{r.get('warm_speedup', 0)}x warm")
-                 for r in rows if "nodes" in r]
+                 for r in rows
+                 if "nodes" in r and r.get("speedup") is not None]
         if items:
             table = _table(
                 ["nodes", "legacy ms", "engine ms", "warm ms",
-                 "speedup", "call reduction"],
-                [[r.get(k, "") for k in (
+                 "device ms", "device µs/solve", "speedup",
+                 "call reduction"],
+                [["" if r.get(k) is None else r.get(k, "") for k in (
                     "nodes", "legacy_ms", "engine_ms", "warm_ms",
+                    "device_ms", "device_us_per_solve",
                     "speedup", "call_reduction")] for r in rows])
             cards.append(_card(
                 "Capacity-engine speedup vs legacy (latest run)",

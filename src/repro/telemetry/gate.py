@@ -53,6 +53,7 @@ class Tolerances:
     qos: float = 0.02         # absolute QoS violation-rate increase
     latency: float = 3.0      # relative latency slack (wall-clock noise)
     counters: float = 0.25    # relative growth of deterministic counters
+    slope: float = 0.3        # absolute slack on scaling-law exponents
 
     @classmethod
     def from_env(cls) -> "Tolerances":
@@ -61,7 +62,8 @@ class Tolerances:
         return cls(density=f("REPRO_GATE_DENSITY_TOL", cls.density),
                    qos=f("REPRO_GATE_QOS_TOL", cls.qos),
                    latency=f("REPRO_GATE_LATENCY_TOL", cls.latency),
-                   counters=f("REPRO_GATE_COUNTER_TOL", cls.counters))
+                   counters=f("REPRO_GATE_COUNTER_TOL", cls.counters),
+                   slope=f("REPRO_GATE_SLOPE_TOL", cls.slope))
 
 
 @dataclass
@@ -97,6 +99,9 @@ class Rule:
 class StudyRules:
     key: Tuple[str, ...]
     rules: List[Rule] = field(default_factory=list)
+    #: rules applied to the report-level ``metrics`` dict (scaling-law
+    #: exponents, whole-sweep aggregates) rather than per-row values
+    metric_rules: List[Rule] = field(default_factory=list)
 
 
 STUDY_RULES: Dict[str, StudyRules] = {
@@ -113,7 +118,15 @@ STUDY_RULES: Dict[str, StudyRules] = {
         rules=[Rule("tables_equal", "eq", None, hard=True),
                Rule("engine_calls", "max", "counters", hard=True),
                Rule("engine_rows", "max", "counters", hard=False),
-               Rule("unique_solves", "max", "counters", hard=False)]),
+               Rule("unique_solves", "max", "counters", hard=False),
+               Rule("device_us_per_solve", "max", "latency", hard=False),
+               Rule("device_calls", "max", "counters", hard=False)],
+        # the device drain's headline: per-solve latency must stay flat
+        # as the cluster grows (log-log slope ~<= 0), and the numpy-vs-
+        # device capacity tables must stay bit-identical at every size
+        metric_rules=[Rule("device_per_solve_slope", "max_abs", "slope",
+                           hard=True),
+                      Rule("tables_equal_all", "eq", None, hard=True)]),
 }
 #: fallback for studies without registered rules: gate the headline
 #: metrics if the rows carry them
@@ -197,6 +210,13 @@ def compare_reports(baseline: Dict[str, Any], fresh: Dict[str, Any],
         if name not in base_rows:
             deltas.append(Delta(study, name, "-", "missing", "present",
                                 "ok", "new row (not in baseline)"))
+    bmet = baseline.get("metrics") or {}
+    fmet = fresh.get("metrics") or {}
+    for rule in spec.metric_rules:
+        d = _apply_rule(study, "metrics", rule, bmet.get(rule.metric),
+                        fmet.get(rule.metric), tol)
+        if d is not None:
+            deltas.append(d)
     return deltas
 
 
@@ -247,6 +267,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--qos-tol", type=float, default=None)
     ap.add_argument("--latency-tol", type=float, default=None)
     ap.add_argument("--counter-tol", type=float, default=None)
+    ap.add_argument("--slope-tol", type=float, default=None)
     ap.add_argument("--promote", action="append", default=None,
                     metavar="STUDY",
                     help="promote STUDY's latest run to baseline and "
@@ -264,7 +285,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return 0
 
     tol = Tolerances.from_env()
-    for name in ("density", "qos", "latency", "counters"):
+    for name in ("density", "qos", "latency", "counters", "slope"):
         cli = getattr(args, {"counters": "counter_tol"}.get(
             name, f"{name}_tol"))
         if cli is not None:

@@ -220,6 +220,55 @@ def test_retrain_bumps_epoch_and_clears_cache(world):
     assert eng.capacity_hint(dict(coloc), names[0]) is None
 
 
+@pytest.mark.parametrize("bad", [dict(chunk_init=0), dict(chunk_init=-2),
+                                 dict(chunk_growth=0),
+                                 dict(max_cache_entries=0),
+                                 dict(drain="gpu")])
+def test_engine_config_rejects_nonterminating_sweeps(bad):
+    """chunk_init < 1 or chunk_growth < 1 used to hang solve_many: the
+    m-sweep chunks decay to empty and the drain loop never advances.
+    Now rejected at construction."""
+    with pytest.raises(ValueError):
+        EngineConfig(**bad)
+    EngineConfig(chunk_init=1, chunk_growth=1)  # degenerate-but-finite: ok
+
+
+def test_cache_eviction_is_oldest_first_not_wholesale(world):
+    """Hitting max_cache_entries used to clear() the whole cache — every
+    warm entry lost at once, hit rate collapsing to zero right at the
+    boundary.  Now the oldest entry alone is evicted."""
+    specs, gt, store, qos, pred = world
+    eng = _engine(world, m_max=6, max_cache_entries=4)
+    names = sorted(specs)
+    colocs = [{names[j]: (float(i + 1), 0.0)}
+              for i in range(2) for j in range(1, 4)]
+    caps = [eng.capacity(dict(c), names[0], 6)[0] for c in colocs]
+    assert len(eng._cache) == 4
+    # the 4 newest survive the boundary crossing (c2..c5); wholesale
+    # clearing would have left only the entries inserted after the wipe
+    hits_before = eng.stats.cache_hits
+    for i in (2, 3, 4, 5):
+        cap, rows = eng.capacity(dict(colocs[i]), names[0], 6)
+        assert cap == caps[i] and rows == 0
+    assert eng.stats.cache_hits == hits_before + 4
+    # the evicted oldest miss and re-solve to the same value
+    for i in (0, 1):
+        assert eng.capacity_hint(dict(colocs[i]), names[0], 6) is None
+        cap, rows = eng.capacity(dict(colocs[i]), names[0], 6)
+        assert cap == caps[i] and rows > 0
+
+
+def test_cache_eviction_keeps_one_in_one_out(world):
+    """Past the bound, each cold insert evicts exactly one entry — the
+    cache holds its size instead of collapsing."""
+    specs, gt, store, qos, pred = world
+    eng = _engine(world, m_max=6, max_cache_entries=4)
+    names = sorted(specs)
+    for step in range(10):
+        eng.capacity({names[1]: (1.0, float(step))}, names[0], 6)
+        assert len(eng._cache) == min(step + 1, 4)
+
+
 # ---------------------------------------------------------------------------
 # Scheduler / export-surface integration
 # ---------------------------------------------------------------------------

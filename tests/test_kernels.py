@@ -205,6 +205,127 @@ def test_rfr_forest_real_kernel_cluster_batch():
                                atol=1e-5, rtol=1e-5)
 
 
+def test_rfr_forest_apply_empty_batch():
+    """N == 0 (a drain with nothing to solve) used to divide by zero:
+    bn = min(block_n, 0) = 0 and grid = (N // bn,)."""
+    rng = np.random.default_rng(3)
+    T, depth, F = 4, 3, 8
+    NN = (1 << depth) - 1
+    feat = rng.integers(0, F, (T, NN)).astype(np.int32)
+    thr = rng.standard_normal((T, NN)).astype(np.float32)
+    leaf = rng.standard_normal((T, 1 << depth)).astype(np.float32)
+    out = rfr_forest_apply(jnp.zeros((0, F), jnp.float32),
+                           jnp.asarray(feat), jnp.asarray(thr),
+                           jnp.asarray(leaf), interpret=True)
+    assert out.shape == (0,)
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("N,block_n", [(3, 256), (100, 32), (64, 64)])
+def test_rfr_forest_apply_partial_blocks(N, block_n):
+    """Batches smaller than block_n and non-multiples of it (padded
+    grid) must match the oracle on the real rows."""
+    rng = np.random.default_rng(4)
+    T, depth, F = 6, 4, 10
+    NN = (1 << depth) - 1
+    x = rng.standard_normal((N, F)).astype(np.float32)
+    feat = rng.integers(0, F, (T, NN)).astype(np.int32)
+    thr = rng.standard_normal((T, NN)).astype(np.float32)
+    leaf = rng.standard_normal((T, 1 << depth)).astype(np.float32)
+    got = rfr_forest_apply(jnp.asarray(x), jnp.asarray(feat),
+                           jnp.asarray(thr), jnp.asarray(leaf),
+                           block_n=block_n, interpret=True)
+    want = ref.rfr_forest_ref(x, feat, thr, leaf)
+    assert got.shape == (N,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RFR fused capacity m-sweep
+# ---------------------------------------------------------------------------
+
+
+def _sweep_case(seed, S=7, M=6, R=3, T=8, depth=4, F=9):
+    """A padded scenario tensor exercising both padding encodings:
+    +inf bounds (R padding rows, always pass) and -inf bounds (m beyond
+    a scenario's own m_max, always fail)."""
+    rng = np.random.default_rng(seed)
+    NN = (1 << depth) - 1
+    x = rng.standard_normal((S, M, R, F)).astype(np.float32)
+    feat = rng.integers(0, F, (T, NN)).astype(np.int32)
+    thr = rng.standard_normal((T, NN)).astype(np.float32)
+    leaf = rng.standard_normal((T, 1 << depth)).astype(np.float32)
+    # finite bounds in the prediction range so pass/fail actually varies
+    bounds = rng.uniform(-0.6, 0.6, (S, M, R)).astype(np.float32)
+    for s in range(S):
+        r_real = int(rng.integers(1, R + 1))
+        m_real = int(rng.integers(0, M + 1))
+        bounds[s, :, r_real:] = np.inf      # padded rows pass
+        bounds[s, m_real:, :] = -np.inf     # past this scenario's m_max
+    return x, bounds, feat, thr, leaf
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+@pytest.mark.parametrize("log_target", [False, True])
+def test_rfr_capacity_sweep_matches_ref(use_pallas, log_target):
+    x, bounds, feat, thr, leaf = _sweep_case(5)
+    got = ops.rfr_sweep_op(jnp.asarray(x), jnp.asarray(bounds),
+                           jnp.asarray(feat), jnp.asarray(thr),
+                           jnp.asarray(leaf), use_pallas=use_pallas,
+                           interpret=True, log_target=log_target)
+    want = ref.rfr_capacity_sweep_ref(x, bounds, feat, thr, leaf,
+                                      log_target=log_target)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rfr_capacity_sweep_block_partitioning():
+    """Scenario-block size must not change results (padded scenarios
+    pass trivially and are sliced off)."""
+    from repro.kernels.rfr_inference import rfr_capacity_sweep
+    x, bounds, feat, thr, leaf = _sweep_case(6, S=11)
+    want = ref.rfr_capacity_sweep_ref(x, bounds, feat, thr, leaf)
+    for bs in (1, 3, 11, 64):
+        got = rfr_capacity_sweep(jnp.asarray(x), jnp.asarray(bounds),
+                                 jnp.asarray(feat), jnp.asarray(thr),
+                                 jnp.asarray(leaf), block_s=bs,
+                                 interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_rfr_capacity_sweep_degenerate_shapes(use_pallas):
+    rng = np.random.default_rng(7)
+    T, depth, F = 4, 3, 6
+    NN = (1 << depth) - 1
+    feat = jnp.asarray(rng.integers(0, F, (T, NN)).astype(np.int32))
+    thr = jnp.asarray(rng.standard_normal((T, NN)).astype(np.float32))
+    leaf = jnp.asarray(rng.standard_normal((T, 1 << depth)).astype(
+        np.float32))
+    for S, M, R in [(0, 4, 2), (3, 0, 2), (3, 4, 0)]:
+        out = ops.rfr_sweep_op(jnp.zeros((S, M, R, F), jnp.float32),
+                               jnp.zeros((S, M, R), jnp.float32),
+                               feat, thr, leaf, use_pallas=use_pallas,
+                               interpret=True)
+        assert out.shape == (S,)
+        assert out.dtype == jnp.int32
+        assert not np.asarray(out).any()
+
+
+@pytest.mark.tpu_only
+def test_rfr_capacity_sweep_real_kernel():
+    """The compiled (interpret=False) fused sweep at drain scale."""
+    x, bounds, feat, thr, leaf = _sweep_case(8, S=128, M=16, R=4,
+                                             T=32, depth=8, F=31)
+    got = ops.rfr_sweep_op(jnp.asarray(x), jnp.asarray(bounds),
+                           jnp.asarray(feat), jnp.asarray(thr),
+                           jnp.asarray(leaf), use_pallas=True,
+                           interpret=False)
+    want = ref.rfr_capacity_sweep_ref(x, bounds, feat, thr, leaf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_rfr_op_consistent_with_trained_model():
     """The Pallas engine and the numpy engine of the actual predictor
     agree on real trained trees."""
