@@ -342,6 +342,90 @@ def pipeline_parity(kind: str = "burst-storm", duration: int = 120,
 
 
 # ---------------------------------------------------------------------------
+# Cells parity: legacy single-loop Simulation vs the single-cell event core
+# ---------------------------------------------------------------------------
+
+
+def _deterministic_counters(res) -> dict:
+    """Every run counter that is deterministic under a fixed ground-truth
+    RNG stream.  Wall-clock fields (sched/cold-start latencies) and the
+    predictor's cumulative inference counters are excluded by design:
+    the former differ between any two runs, the latter accumulate across
+    runs sharing one world."""
+    s, a = res.sched, res.scaling
+    return {
+        "requests": res.requests,
+        "violated_requests": res.violated_requests,
+        "per_fn_violations": dict(res.per_fn_violations),
+        "per_fn_requests": dict(res.per_fn_requests),
+        "instance_seconds": res.instance_seconds,
+        "node_seconds": res.node_seconds,
+        "nodes_peak": res.nodes_peak,
+        "density_series": list(res.density_series),
+        "decisions": s.decisions, "placed": s.instances_placed,
+        "fast": s.fast, "slow": s.slow, "failed": s.failed,
+        "real_cold": a.real_cold_starts,
+        "logical_cold": a.logical_cold_starts,
+        "blocked_logical": a.blocked_logical,
+        "migrations": a.migrations, "releases": a.releases,
+        "evictions": a.evictions,
+    }
+
+
+def cells_parity(kind: str = "burst-storm", duration: int = 120,
+                 target_nodes: int = 24, n_functions: int = 8,
+                 seed: int = 0,
+                 systems=("k8s", "jiagu", "harvesting")) -> dict:
+    """The sharded-core reproduction gate: a single-cell
+    ``CellSimulation`` (the event-driven loop over the exact legacy
+    assembly) must reproduce the legacy ``Simulation`` bit-for-bit —
+    density, QoS, and every scheduling/scaling counter.  Both arms run
+    against one shared world with the ground-truth RNG re-seeded
+    between runs, so any divergence is the event core's fault, not
+    noise.  Raises on divergence; ``benchmarks.scaling`` records the
+    outcome as the ``cells_parity`` metric in ``BENCH_scaling.json``."""
+    from repro.platform import cell_scenario_simulation
+
+    base = {
+        "scenario": {"kind": kind, "n_functions": n_functions,
+                     "duration_s": duration,
+                     "target_nodes": target_nodes, "seed": seed},
+        "prediction": {"n_train": 1000, "n_trees": 16},
+    }
+    scenario = scenario_from_config(PlatformConfig.from_dict(base))
+    world = scenario_world(scenario, n_train=1000, n_trees=16)
+    rows = []
+    for system in systems:
+        manifest = copy.deepcopy(base)
+        manifest["scheduler"] = {"name": system}
+        cfg = PlatformConfig.from_dict(manifest)
+        world.gt.reseed()
+        legacy = Platform.build(scenario=scenario, config=cfg,
+                                world=world).run()
+        world.gt.reseed()
+        cells = cell_scenario_simulation(scenario, system, n_cells=1,
+                                         world=world).run()
+        a, b = (_deterministic_counters(legacy),
+                _deterministic_counters(cells))
+        diverged = sorted(k for k in a if a[k] != b[k])
+        if diverged:
+            raise RuntimeError(
+                f"cells parity: {system} diverged on {diverged}")
+        rows.append({"system": system, "decisions": a["decisions"],
+                     "placed": a["placed"],
+                     "density": round(legacy.density, 3),
+                     "qos_violation":
+                         round(legacy.qos_violation_rate, 4),
+                     "parity": True})
+        print(f"# cells-parity {system}@{target_nodes}: "
+              f"decisions={a['decisions']} placed={a['placed']} "
+              f"=> identical", flush=True)
+    return {"kind": kind, "duration_s": duration,
+            "target_nodes": target_nodes, "n_functions": n_functions,
+            "rows": rows, "parity": True}
+
+
+# ---------------------------------------------------------------------------
 # Router A/B: equal split vs the locality/affinity router
 # ---------------------------------------------------------------------------
 
@@ -578,9 +662,15 @@ if __name__ == "__main__":
                     help="256-node online-retraining + schema v1-vs-v2 "
                          "node-shape capacity-lift study (skips the "
                          "density sweep)")
+    ap.add_argument("--cells-parity", action="store_true",
+                    help="single-cell event core vs legacy Simulation "
+                         "bit-parity gate (skips the density sweep)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.retrain_online:
         retrain_online(quick=args.quick, seed=args.seed)
+    elif args.cells_parity:
+        cells_parity(seed=args.seed)
+        print("# cells-parity: all systems identical => PASS")
     else:
         run(quick=args.quick, seed=args.seed, bench=True)

@@ -1,0 +1,178 @@
+"""Cell-sharded event-core scaling study: 1k -> 10k-node fleets at
+sub-linear per-node cost.
+
+The legacy ``Simulation`` pays O(nodes) per tick — every spec visited
+by the autoscaler, every node visited by ``_measure`` — so a 10k-node
+study costs 100x a 100-node one regardless of how much of the fleet is
+actually doing anything.  The cell-sharded event core
+(``repro.core.cells``) pays only for *due* work: per-cell due sets
+(arrivals, drop transitions, wake-heap expiries, dirty marks) gate
+scheduling, and dirty-set measurement visits only nodes hosting live
+traffic.  This study drives the Azure-like sparse long-tail population
+(most functions idle at any instant — the regime the event core is
+built for) through the ``repro.platform`` control plane with
+``cells.count = 4`` at 1k -> 10k target nodes and reports wall-clock
+per node per size.
+
+Gates (recorded in ``BENCH_scaling.json`` and enforced by the
+telemetry regression gate):
+
+  * ``wallclock_per_node_slope`` — log-log slope of wall-seconds per
+    node vs fleet size must stay **< 1.0** (sub-linear per-node cost:
+    total wall-clock grows strictly slower than quadratically, the
+    naive all-pairs floor a full-scan loop trends toward as per-tick
+    work itself scales with the fleet).
+  * ``cells_parity`` — the single-cell event core must reproduce the
+    legacy ``Simulation`` bit-for-bit (``large_cluster.cells_parity``,
+    also gated in tier-1 by ``tests/test_cells.py``).
+
+  PYTHONPATH=src python -m benchmarks.scaling [--quick | --smoke]
+
+``--smoke`` (the ``scripts/verify.sh --scale`` arm) runs one 1k-node
+size plus the parity gate and writes no trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .common import emit, save_artifact
+from .large_cluster import cells_parity
+
+from repro.core import scenario_world
+from repro.platform import Platform, PlatformConfig, scenario_from_config
+from repro.telemetry import RunReport, append_bench
+
+KIND = "azure-sparse"
+N_CELLS = 4
+N_FUNCTIONS = 32
+#: per-node wall-clock must grow sub-linearly in fleet size
+SLOPE_MAX = 1.0
+
+
+def study_spec(quick: bool = False, seed: int = 0,
+               smoke: bool = False) -> dict:
+    sizes = [1000] if smoke else \
+        [1000, 4000, 10000] if quick else [1000, 2000, 4000, 10000]
+    return {
+        "sizes": sizes,
+        "seed": seed,
+        "base": {
+            "scenario": {"kind": KIND, "n_functions": N_FUNCTIONS,
+                         "duration_s": 90 if (quick or smoke) else 180,
+                         "seed": seed, "spec_seed": seed + 5},
+            "prediction": {"n_train": 1500, "n_trees": 16},
+            "cells": {"count": N_CELLS},
+        },
+    }
+
+
+def _run_size(spec: dict, target: int, world):
+    import copy
+    manifest = copy.deepcopy(spec["base"])
+    manifest["scenario"]["target_nodes"] = target
+    cfg = PlatformConfig.from_dict(manifest)
+    scenario = scenario_from_config(cfg)
+    if world is None:
+        world = scenario_world(scenario, n_train=cfg.prediction.n_train,
+                               n_trees=cfg.prediction.n_trees)
+    t0 = time.perf_counter()
+    plat = Platform.build(scenario=scenario, config=cfg, world=world)
+    res = plat.run()
+    wall = time.perf_counter() - t0
+    sim = plat.simulation
+    row = {
+        "target_nodes": target,
+        "cells": N_CELLS,
+        "mean_nodes": round(res.node_seconds / max(res.ticks, 1), 1),
+        "peak_nodes": res.nodes_peak,
+        "density": round(res.density, 3),
+        "qos_violation": round(res.qos_violation_rate, 4),
+        "decisions": res.sched.decisions,
+        "placed": res.sched.instances_placed,
+        "idle_cell_frac": round(
+            sim.idle_cell_ticks / max(sim.cell_ticks, 1), 3),
+        "exchange_published": sim.exchange.published
+        if sim.exchange is not None else 0,
+        "wall_s": round(wall, 1),
+        "wall_ms_per_node": round(wall * 1e3 / target, 4),
+    }
+    return row, world
+
+
+def run(quick: bool = False, seed: int = 0, bench: bool = False,
+        smoke: bool = False):
+    """The 1k -> 10k wall-clock curve.  One function population and one
+    trained forest are shared across sizes (only the trace scale and the
+    node budget change), so the curve isolates simulation cost.
+    ``bench=True`` persists a ``RunReport`` into ``BENCH_scaling.json``
+    for the regression gate and the dashboard."""
+    spec = study_spec(quick=quick, seed=seed, smoke=smoke)
+    rows = []
+    world = None
+    for target in spec["sizes"]:
+        row, world = _run_size(spec, target, world)
+        rows.append(row)
+        print(f"# scaling {KIND}@{target} x{N_CELLS}cells: "
+              f"wall={row['wall_s']}s "
+              f"({row['wall_ms_per_node']}ms/node) "
+              f"density={row['density']} qos={row['qos_violation']} "
+              f"idle={row['idle_cell_frac']}", flush=True)
+    emit(rows)
+
+    slope = 0.0
+    if len(rows) >= 2:
+        ns = [r["target_nodes"] for r in rows]
+        per_node = [max(r["wall_s"], 1e-9) / r["target_nodes"]
+                    for r in rows]
+        slope = float(np.polyfit(np.log(ns), np.log(per_node), 1)[0])
+        # explicit raise, not assert: the gate must fire under -O too
+        if slope >= SLOPE_MAX:
+            raise RuntimeError(
+                f"scaling: per-node wall-clock grows super-linearly "
+                f"(log-log slope {slope:.3f} >= {SLOPE_MAX})")
+        print(f"# per-node wall-clock slope over {ns}: {slope:.3f} "
+              f"=> PASS (< {SLOPE_MAX})")
+
+    print("\n# cells parity (single-cell event core vs legacy loop)")
+    parity = cells_parity(seed=seed)
+    print("# cells-parity: all systems identical => PASS")
+
+    record = {"kind": KIND, "n_cells": N_CELLS,
+              "n_functions": N_FUNCTIONS, "sizes": spec["sizes"],
+              "base_manifest": spec["base"], "rows": rows,
+              "wallclock_per_node_slope": round(slope, 4),
+              "cells_parity": parity["parity"]}
+    save_artifact("scaling", record)
+    if bench:
+        report = RunReport.build(
+            "scaling", mode="quick" if quick else "full",
+            manifest={"kind": KIND, "n_cells": N_CELLS,
+                      "sizes": spec["sizes"], "base": spec["base"]},
+            metrics={"wallclock_per_node_slope": round(slope, 4),
+                     "cells_parity": parity["parity"],
+                     "wall_s_max_size": rows[-1]["wall_s"],
+                     "qos_violation_max": max(r["qos_violation"]
+                                              for r in rows),
+                     "idle_cell_frac_min": min(r["idle_cell_frac"]
+                                               for r in rows)},
+            rows=rows)
+        path = append_bench(report)
+        print(f"# bench: appended {report.mode} run "
+              f"({len(rows)} rows, git {report.git_sha}) -> {path}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="{1k,4k,10k} nodes, 90-tick traces")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one 1k-node size + the parity gate, no "
+                         "trajectory write (scripts/verify.sh --scale)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke, seed=args.seed,
+        bench=not args.smoke)

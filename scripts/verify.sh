@@ -26,6 +26,12 @@
 #                                the 256-node online-retraining / schema
 #                                v1-vs-v2 gate + the --bench regression
 #                                gate
+#   scripts/verify.sh --scale    sharded-control-plane smoke: one
+#                                1k-node azure-sparse study through the
+#                                cell-sharded event core (cells=4) plus
+#                                the cells=1 bit-parity gate, no
+#                                trajectory write
+#                                (python -m benchmarks.scaling --smoke)
 # The platform smoke step builds every registered scheduler — the four
 # legacy ones, their pipeline-stack re-expressions, and the harvesting
 # scheduler — against one scenario from pure PlatformConfig manifest
@@ -41,6 +47,7 @@ run_bench_gate() {
     # quick studies append fresh RunReports to the BENCH trajectories...
     python -m benchmarks.large_cluster --quick
     python -m benchmarks.capacity_engine --quick
+    python -m benchmarks.scaling --quick
     # ...the gate diffs the fresh runs against the checked-in baselines
     # (hard-fails on density/QoS regressions; generous slack on the
     # wall-clock latency percentiles)...
@@ -52,6 +59,11 @@ run_bench_gate() {
 if [ "${1:-}" = "--bench" ]; then
     shift
     run_bench_gate
+    exit 0
+fi
+if [ "${1:-}" = "--scale" ]; then
+    shift
+    python -m benchmarks.scaling --smoke
     exit 0
 fi
 if [ "${1:-}" = "--full" ]; then

@@ -4,6 +4,8 @@ K8s/Gsight/Owl baselines."""
 from .autoscaler import (Autoscaler, ScalingConfig, ScalingMetrics,
                          SchedulerCapacityProvider)
 from .capacity import QOS_MULT, QoSStore, capacity_of, update_capacity_table
+from .cells import (CapacityExchange, Cell, CellRouter, CellSimulation,
+                    cell_scenario_simulation)
 from .cluster import CapEntry, Cluster, FuncState, Node
 from .events import EventHub, JsonlObserver, Observer
 from .harvesting import HarvestingScheduler
@@ -61,6 +63,8 @@ __all__ = [
     "BENCH_FUNCTIONS", "FunctionSpec", "ProfileStore", "arch_functions",
     "synthetic_functions", "FAST_PATH_MS", "REROUTE_MS", "BaseScheduler",
     "GsightScheduler", "JiaguScheduler", "K8sScheduler", "OwlScheduler",
+    "Cell", "CellRouter", "CellSimulation", "CapacityExchange",
+    "cell_scenario_simulation",
     "SimConfig", "SimResult", "Simulation", "generate_dataset", "Trace",
     "JsonlObserver", "LocalityRouter", "HarvestingScheduler",
     "CandidatePass", "DecisionContext", "DecisionTrace", "TraceBinding",

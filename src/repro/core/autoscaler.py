@@ -21,7 +21,7 @@ from __future__ import annotations
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, Iterable, List, Optional, Tuple
 
 from .cluster import Cluster, Node
 from .events import EventHub
@@ -166,6 +166,9 @@ class Autoscaler:
         self.metrics = ScalingMetrics()
         self._below_since: Dict[str, Optional[float]] = {}
         self._ledger = _CachedLedger()
+        #: event-core hook — called with fn when an out-of-band mutation
+        #: (a scheduler-initiated release) means fn needs a tick soon
+        self.on_fn_dirty: Optional[Callable[[str], None]] = None
 
     # ------------------------------------------------------------------
 
@@ -190,6 +193,8 @@ class Autoscaler:
         self._ledger.push(fn, now, node.id, k)
         self.metrics.releases += k
         self.events.on_scale(now, fn, "release", k)
+        if self.on_fn_dirty is not None:
+            self.on_fn_dirty(fn)
         return True
 
     def expected_instances(self, fn: str, rps: float) -> int:
@@ -198,12 +203,35 @@ class Autoscaler:
             return 0
         return max(1, math.ceil(rps / spec.saturated_rps))
 
-    def tick(self, now: float, rps: Dict[str, float]):
-        for fn in self.cluster.specs:
+    def tick(self, now: float, rps: Dict[str, float],
+             fns: Optional[Iterable[str]] = None):
+        """One autoscaler pass.  ``fns=None`` (the legacy tick loop)
+        visits every spec; the event-driven core passes just the *due*
+        functions, already ordered like ``cluster.specs`` — skipped
+        functions are exactly those whose ``_tick_fn`` would have been a
+        no-op (no load, no timers armed, no ledger entries)."""
+        for fn in (self.cluster.specs if fns is None else fns):
             self._tick_fn(now, fn, rps.get(fn, 0.0))
         if self.cfg.dual_staged and self.cfg.migrate:
             self._migrate(now)
         self.cluster.reap_empty()
+
+    def next_wake(self, fn: str) -> Optional[float]:
+        """Earliest future time fn needs autoscaler attention absent any
+        load change: the armed scale-down timer and/or the keep-alive
+        expiry of the oldest ledger entry.  None = nothing pending (the
+        event core lets the function sleep until its load changes)."""
+        t: Optional[float] = None
+        if self.cfg.dual_staged:
+            dq = self._ledger.q.get(fn)
+            if dq:
+                t = dq[0][0] + (self.cfg.keepalive_s - self.cfg.release_s)
+        since = self._below_since.get(fn)
+        if since is not None:
+            delay = self.cfg.release_s if self.cfg.dual_staged \
+                else self.cfg.keepalive_s
+            t = since + delay if t is None else min(t, since + delay)
+        return t
 
     # ------------------------------------------------------------------
 
@@ -318,8 +346,16 @@ class Autoscaler:
         a node left with only cached instances migrates them to busy
         nodes with headroom so the empty server can be returned (paper
         §6: "an empty server will be evicted to optimize costs" — cached
-        instances must not pin otherwise-idle machines)."""
-        for node in list(self.cluster.nodes.values()):
+        instances must not pin otherwise-idle machines).
+
+        Scans only nodes holding cached instances (the cluster's
+        ``nodes_with_cached`` index, ascending id like the old full
+        scan): zero-cached nodes are no-ops here, and a node that
+        *gains* cached instances mid-pass as a migration target either
+        was already in the snapshot or keeps ``n_sat > 0`` with
+        post-move excess <= 0 (the target-fit condition), so the full
+        scan would not have acted on it either."""
+        for node in self.cluster.nodes_with_cached():
             all_cached = all(s.n_sat == 0 for s in node.funcs.values()) \
                 and node.n_instances() > 0
             for fn, st in list(node.funcs.items()):
@@ -339,7 +375,7 @@ class Autoscaler:
                 if target is None:
                     continue
                 node.evict_cached(fn, k)
-                target.state(fn).n_cached += k
+                target.add_cached(fn, k)
                 self._ledger.move(fn, node.id, target.id, k)
                 self.metrics.migrations += k
                 self.scheduler.notify_change(node, now)

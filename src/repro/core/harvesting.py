@@ -240,6 +240,9 @@ class HarvestingScheduler(PipelineHostMixin, JiaguScheduler):
             # table refresh (Jiagu §5 semantics)
             self.notify_change(target, now)
 
+    def has_pending_work(self) -> bool:
+        return bool(self._released) or super().has_pending_work()
+
     def on_tick(self, now: float):
         self._now = now
         super().on_tick(now)

@@ -191,7 +191,8 @@ class DecisionContext:
     bit-identical to the legacy schedulers."""
 
     __slots__ = ("sched", "cluster", "metrics", "fn", "count", "now",
-                 "remaining", "decision_ms", "placements", "trace")
+                 "remaining", "decision_ms", "placements", "trace",
+                 "_mem_used")
 
     def __init__(self, sched: BaseScheduler, fn: str, count: int,
                  now: float, trace: Optional[DecisionTrace]):
@@ -205,13 +206,23 @@ class DecisionContext:
         self.decision_ms = 0.0
         self.placements: List[Placement] = []
         self.trace = trace
+        # per-decision memo of node.mem_used: filters/scorers/binders
+        # re-ask for the same node's headroom many times per decision
+        # (every pass, every per-instance re-run) while its counts only
+        # change through place(), which invalidates the entry
+        self._mem_used: Dict[int, float] = {}
 
     @property
     def spec(self):
         return self.cluster.specs[self.fn]
 
     def mem_room(self, node: Node) -> int:
-        return self.cluster.mem_headroom(node, self.fn)
+        used = self._mem_used.get(node.id)
+        if used is None:
+            used = self._mem_used[node.id] = \
+                node.mem_used(self.cluster.specs)
+        spec = self.cluster.specs[self.fn]
+        return max(0, int((node.res.mem_mb - used) // spec.mem_req))
 
     def add_ms(self, ms: float) -> None:
         self.decision_ms += ms
@@ -231,6 +242,7 @@ class DecisionContext:
         """Commit ``k`` instances of ``fn`` to ``node`` at the current
         cumulative decision latency (the legacy ``place()`` closure)."""
         node.deploy(self.fn, k)
+        self._mem_used.pop(node.id, None)   # memoized headroom is stale
         self.placements.append(Placement(node.id, k, self.decision_ms))
         self.remaining -= k
         self.metrics.instances_placed += k

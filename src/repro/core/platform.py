@@ -53,6 +53,8 @@ from .scenarios import (NodeClass, Scenario, ScenarioWorld,
                         get_scenario_builder, make_scenario,
                         register_scenario, registered_scenarios,
                         scenario_simulation, scenario_world)
+from .cells import (CapacityExchange, Cell, CellRouter, CellSimulation,
+                    cell_scenario_simulation)
 from .simulator import (EqualSplitRouter, LocalityRouter, SimResult,
                         Simulation)
 from .traces import get_trace, register_trace, registered_traces
@@ -342,6 +344,24 @@ class SimulationSection:
     router: str = "equal-split"
 
 
+@dataclass
+class CellsSection:
+    """Sharded control plane (``core/cells.py``): ``count > 1``
+    partitions the fleet into that many cells, each with its own
+    cluster slice, scheduler, autoscaler and PredictionService, driven
+    by the event-driven per-cell loop with cross-cell traffic shares
+    (``CellRouter``).  ``count = 1`` (default) keeps the legacy
+    single-loop assembly — bit-identical results, gated in tier-1."""
+
+    count: int = 1
+    #: cross-cell waterfill cap: fraction of a cell's saturated
+    #: throughput loaded before traffic spills to the next cell
+    load_cap: float = 0.85
+    #: capacity gossip between cell services (solved capacities are
+    #: published to sibling caches, epoch-checked)
+    exchange: bool = True
+
+
 _SECTIONS = {
     "cluster": ClusterSection,
     "scenario": ScenarioSection,
@@ -351,6 +371,7 @@ _SECTIONS = {
     "pipeline": PipelineSection,
     "simulation": SimulationSection,
     "telemetry": TelemetrySection,
+    "cells": CellsSection,
 }
 
 
@@ -395,6 +416,7 @@ class PlatformConfig:
     pipeline: PipelineSection = field(default_factory=PipelineSection)
     simulation: SimulationSection = field(default_factory=SimulationSection)
     telemetry: TelemetrySection = field(default_factory=TelemetrySection)
+    cells: CellsSection = field(default_factory=CellsSection)
 
     # -- (de)serialization ------------------------------------------------
 
@@ -484,6 +506,13 @@ class PlatformConfig:
                 f"scheduler {entry.name!r} runs without a predictor; "
                 f"schema v2 / online retraining need a prediction-backed "
                 f"scheduler ({backed})")
+        if self.cells.count < 1:
+            raise PlatformConfigError(
+                f"cells.count must be >= 1, got {self.cells.count}")
+        if not 0 < self.cells.load_cap <= 1:
+            raise PlatformConfigError(
+                f"cells.load_cap must be in (0, 1], got "
+                f"{self.cells.load_cap}")
         return self
 
 
@@ -512,7 +541,8 @@ class Platform:
     simulation + observer hub.  Construct with ``Platform.build``."""
 
     def __init__(self, config: PlatformConfig, scenario: Scenario,
-                 world: ScenarioWorld, simulation: Simulation,
+                 world: ScenarioWorld,
+                 simulation: Union[Simulation, CellSimulation],
                  hub: EventHub, telemetry: Optional[Telemetry] = None):
         self.config = config
         self.scenario = scenario
@@ -620,8 +650,7 @@ class Platform:
                 f"schema v{world.schema_version} but the config requests "
                 f"v{p.schema_version}; rebuild the world or align "
                 f"prediction.schema_version")
-        simulation = scenario_simulation(
-            scenario, cfg.scheduler.name, world=world,
+        build_kw = dict(
             release_s=cfg.scaling.release_s,
             keepalive_s=cfg.scaling.keepalive_s,
             init_ms=cfg.scaling.init_ms, migrate=cfg.scaling.migrate,
@@ -633,15 +662,36 @@ class Platform:
             retrain_every=p.retrain_every,
             sample_every_s=sim_cfg.sample_every_s,
             sim_seed=sim_cfg.seed,
-            max_nodes=cfg.cluster.max_nodes,
             dual_staged=cfg.scaling.dual_staged,
-            router=router or get_router(sim_cfg.router)(),
             learned_shape_margin=p.learned_shape_margin,
             harvest_headroom=cfg.scheduler.harvest_headroom,
-            qos_release_cooldown_s=cfg.scheduler.qos_release_cooldown_s,
-            events=hub)
-        service = simulation.scheduler.prediction_service
-        if service is not None:
+            qos_release_cooldown_s=cfg.scheduler.qos_release_cooldown_s)
+        if cfg.cells.count > 1:
+            if router is not None:
+                raise PlatformConfigError(
+                    "cells.count > 1 builds one router per cell; select "
+                    "the policy by name via simulation.router instead of "
+                    "passing a router instance")
+            simulation: Union[Simulation, CellSimulation] = \
+                cell_scenario_simulation(
+                    scenario, cfg.scheduler.name,
+                    n_cells=cfg.cells.count, world=world,
+                    router_factory=get_router(sim_cfg.router),
+                    cell_load_cap=cfg.cells.load_cap,
+                    exchange=cfg.cells.exchange,
+                    max_nodes=cfg.cluster.max_nodes, events=hub,
+                    **build_kw)
+        else:
+            simulation = scenario_simulation(
+                scenario, cfg.scheduler.name, world=world,
+                max_nodes=cfg.cluster.max_nodes,
+                router=router or get_router(sim_cfg.router)(),
+                events=hub, **build_kw)
+        services = simulation.services() \
+            if isinstance(simulation, CellSimulation) else \
+            [s for s in (simulation.scheduler.prediction_service,)
+             if s is not None]
+        for service in services:
             if p.engine is not None:
                 service.set_engine(p.engine)
             service.add_retrain_listener(hub.on_retrain)
@@ -661,19 +711,23 @@ class Platform:
                 hub.add(telemetry.observer)
             if want_spans:
                 simulation.tracer = telemetry.tracer
-                if service is not None:
+                for service in services:
                     service.tracer = telemetry.tracer
         # pipeline section: trace toggle + named picker-stage overrides
-        sched = simulation.scheduler
+        # (applied to every cell's scheduler on the sharded path)
+        scheds = simulation.schedulers() \
+            if isinstance(simulation, CellSimulation) \
+            else [simulation.scheduler]
         pl = cfg.pipeline
-        sched.trace_decisions = pl.decision_traces \
-            if pl.decision_traces is not None else bool(hub.observers)
-        if pl.release_picker is not None:
-            sched.release_stage = \
-                get_stage("release", pl.release_picker)(sched)
-        if pl.logical_start_picker is not None:
-            sched.logical_start_stage = \
-                get_stage("logical-start", pl.logical_start_picker)(sched)
+        for sched in scheds:
+            sched.trace_decisions = pl.decision_traces \
+                if pl.decision_traces is not None else bool(hub.observers)
+            if pl.release_picker is not None:
+                sched.release_stage = \
+                    get_stage("release", pl.release_picker)(sched)
+            if pl.logical_start_picker is not None:
+                sched.logical_start_stage = \
+                    get_stage("logical-start", pl.logical_start_picker)(sched)
         return cls(cfg, scenario, world, simulation, hub,
                    telemetry=telemetry)
 
@@ -742,6 +796,10 @@ __all__ = [
     "ClusterSection", "ScenarioSection", "SchedulerSection",
     "ScalingSection", "PredictionSection", "PipelineSection",
     "SimulationSection", "TelemetrySection", "NodeClassConfig",
+    "CellsSection",
+    # sharded control plane
+    "Cell", "CellRouter", "CellSimulation", "CapacityExchange",
+    "cell_scenario_simulation",
     # telemetry
     "Telemetry", "publish_result",
     # capability protocols

@@ -469,6 +469,11 @@ class PredictionService:
         # eagerly here and after each retrain so the probe-forest fit
         # never lands on a scheduling critical path.
         self._shape_margins: Optional[Dict[Tuple[float, ...], float]] = None
+        #: cross-cell capacity exchange (``cells.CapacityExchange``):
+        #: when joined, every freshly solved capacity is published so
+        #: sibling cells' services can serve it cache-warm.  None (the
+        #: default) is zero-overhead.
+        self.exchange = None
         if self.cfg.learned_shape_margin and predictor.fitted:
             self.shape_margins()
 
@@ -588,6 +593,20 @@ class PredictionService:
             while len(self._cache) >= self.cfg.max_cache_entries:
                 self._cache.pop(next(iter(self._cache)))
         self._cache[key] = (self._epoch, cap)
+        if self.exchange is not None:
+            self.exchange.publish(self, key, self._epoch, cap)
+
+    def accept_exchange(self, key: SigKey, epoch: int, cap: int):
+        """Receive a capacity solved by a sibling cell's service.  Only
+        same-epoch entries are accepted (all cells share one forest, so
+        epochs agree except transiently around a retrain) and the entry
+        lands without re-publishing."""
+        if not self.cfg.cache or epoch != self._epoch:
+            return
+        if key not in self._cache:
+            while len(self._cache) >= self.cfg.max_cache_entries:
+                self._cache.pop(next(iter(self._cache)))
+        self._cache[key] = (epoch, cap)
 
     def shape_margins(self) -> Dict[Tuple[float, ...], float]:
         """Per-shape QoS margins learned from per-shape *validation*

@@ -70,6 +70,11 @@ class BaseScheduler:
     #: table-driven schedulers (Jiagu) accept an attached
     #: ``PredictionService`` for batched/cached capacity solving
     accepts_service = False
+    #: True for schedulers whose ``observe`` learns from *healthy* nodes
+    #: too (Owl's safe-set promotion): the measurement pass must then
+    #: visit every hosting node, not just those with live traffic — the
+    #: dirty-set scan in ``simulator.measure_cluster`` keys off this
+    needs_idle_observe = False
     #: pipeline hosts record a ``pipeline.DecisionTrace`` per decision
     #: when True (legacy monolithic schedulers never produce one).
     #: Off by default — traces exist to be consumed through the
@@ -107,6 +112,14 @@ class BaseScheduler:
 
     def on_tick(self, now: float):
         pass
+
+    def has_pending_work(self) -> bool:
+        """True when ``on_tick`` has queued work whose *timing* matters
+        (async capacity-table updates, deferred releases).  The
+        event-driven core calls ``on_tick`` every tick while this holds
+        even if no function in the cell is due, so deferred work drains
+        on the same tick it would under the legacy loop."""
+        return False
 
     def notify_change(self, node: Node, now: float):
         """Called when counts change outside scheduling (release/evict)."""
@@ -246,6 +259,9 @@ class JiaguScheduler(BaseScheduler):
         due = now + est
         self._pending[node.id] = max(self._pending.get(node.id, 0.0), due)
         node.update_pending_until = self._pending[node.id]
+
+    def has_pending_work(self) -> bool:
+        return bool(self._pending)
 
     def on_tick(self, now: float):
         due = [nid for nid, t in self._pending.items() if t <= now]
@@ -492,6 +508,7 @@ class OwlScheduler(BaseScheduler):
     stated limitation -> lower density)."""
 
     name = "owl"
+    needs_idle_observe = True   # safe-set promotion learns from ok nodes
 
     def __init__(self, cluster: Cluster, store: ProfileStore, qos: QoSStore):
         super().__init__(cluster, store, qos)

@@ -91,6 +91,11 @@ class LocalityRouter:
                    sat_totals: Dict[str, int],
                    specs: Dict[str, FunctionSpec]) -> None:
         self._share.clear()
+        # per-node instance totals are shared across every function
+        # planned this tick: contention inputs are identical between
+        # functions, so one sum per hosting node replaces a re-scan per
+        # (function, node) pair — same integers, bit-identical plans
+        n_inst: Dict[int, int] = {}
         for fn, total_sat in sat_totals.items():
             fn_rps = rps.get(fn, 0.0)
             if total_sat <= 0 or fn_rps <= 1e-9:
@@ -101,7 +106,10 @@ class LocalityRouter:
 
             def contention(n: Node) -> float:
                 own = n.funcs[fn]
-                return (n.n_instances() - own.total) / max(own.n_sat, 1)
+                ni = n_inst.get(n.id)
+                if ni is None:
+                    ni = n_inst[n.id] = n.n_instances()
+                return (ni - own.total) / max(own.n_sat, 1)
 
             order = sorted(nodes, key=lambda n: (contention(n), n.id))
             remaining = fn_rps
@@ -307,41 +315,11 @@ class Simulation:
     # ------------------------------------------------------------------
 
     def _measure(self, now: float, rps: Dict[str, float], res: SimResult):
+        # O(1) reads off the cluster's incremental per-function totals
         sat_totals = {fn: self.cluster.sat_count(fn) for fn in self.specs}
-        # stateful routers (LocalityRouter) plan cluster-wide shares
-        # once per tick; the hook is optional so purely per-node
-        # policies stay three-line classes
-        begin_tick = getattr(self.router, "begin_tick", None)
-        if begin_tick is not None:
-            begin_tick(now, self.cluster, rps, sat_totals, self.specs)
-        for node in self.cluster.nodes.values():
-            coloc = node.colocation(self.specs)
-            if not coloc:
-                continue
-            node_ok = True
-            for fn, (spec, n_sat, _nc) in coloc.items():
-                if n_sat <= 0:
-                    continue
-                total_sat = max(sat_totals.get(fn, 0), 1)
-                fn_rps = rps.get(fn, 0.0)
-                if fn_rps <= 1e-9:
-                    continue
-                # routing policy: how much of fn's traffic this node's
-                # instances serve (default: the paper's equal split)
-                per_inst_rps, reqs = self.router.route(
-                    spec, fn_rps, node, n_sat, total_sat)
-                load_frac = per_inst_rps / spec.saturated_rps
-                lat = self.gt.measure(spec, coloc, load_frac,
-                                      node_res=node.res)
-                res.requests += reqs
-                res.per_fn_requests[fn] = \
-                    res.per_fn_requests.get(fn, 0.0) + reqs
-                if lat > self.qos.qos(spec):
-                    res.violated_requests += reqs
-                    res.per_fn_violations[fn] = \
-                        res.per_fn_violations.get(fn, 0.0) + reqs
-                    node_ok = False
-            self.scheduler.observe(node, node_ok, now)
+        measure_cluster(now, self.cluster, self.specs, rps, sat_totals,
+                        self.router, self.scheduler, self.gt, self.qos,
+                        res)
 
     def _collect_sample(self):
         """Runtime training-sample collection (training nodes, §3/§6):
@@ -401,6 +379,69 @@ class Simulation:
         else:
             for x, yv in zip(Xs, ys):
                 self.predictor.add_sample(x, yv, retrain=False)
+
+
+def measure_cluster(now: float, cluster: Cluster,
+                    specs: Dict[str, FunctionSpec],
+                    rps: Dict[str, float], sat_totals: Dict[str, int],
+                    router, scheduler: BaseScheduler, gt: GroundTruth,
+                    qos: QoSStore, res: SimResult) -> None:
+    """One cluster's measurement pass, shared by ``Simulation._measure``
+    and the cell-sharded event core (per cell, with cell-local routers
+    and traffic shares).
+
+    Dirty-set scan: only nodes hosting a function with live traffic can
+    produce a measurement (a ground-truth latency draw needs
+    ``n_sat > 0`` *and* ``fn_rps > 1e-9``), so the loop walks the union
+    of the cluster's hosting indexes over active functions, ascending
+    node id — the exact node order (and therefore the exact ground-truth
+    RNG call sequence) the legacy full scan produced, minus nodes whose
+    iteration would have been a complete no-op.  Skipped nodes would
+    only have received ``observe(node, ok=True)``, a no-op for every
+    scheduler except those that *learn from idleness* — they set
+    ``needs_idle_observe`` (Owl's safe-set promotion) and keep the full
+    scan."""
+    # stateful routers (LocalityRouter) plan cluster-wide shares
+    # once per tick; the hook is optional so purely per-node
+    # policies stay three-line classes
+    begin_tick = getattr(router, "begin_tick", None)
+    if begin_tick is not None:
+        begin_tick(now, cluster, rps, sat_totals, specs)
+    if scheduler.needs_idle_observe:
+        nodes = list(cluster.nodes.values())
+    else:
+        active: set = set()
+        for fn, fn_rps in rps.items():
+            if fn_rps > 1e-9:
+                active.update(cluster.hosting_ids(fn))
+        nodes = [cluster.nodes[nid] for nid in sorted(active)]
+    for node in nodes:
+        coloc = node.colocation(specs)
+        if not coloc:
+            continue
+        node_ok = True
+        for fn, (spec, n_sat, _nc) in coloc.items():
+            if n_sat <= 0:
+                continue
+            total_sat = max(sat_totals.get(fn, 0), 1)
+            fn_rps = rps.get(fn, 0.0)
+            if fn_rps <= 1e-9:
+                continue
+            # routing policy: how much of fn's traffic this node's
+            # instances serve (default: the paper's equal split)
+            per_inst_rps, reqs = router.route(
+                spec, fn_rps, node, n_sat, total_sat)
+            load_frac = per_inst_rps / spec.saturated_rps
+            lat = gt.measure(spec, coloc, load_frac, node_res=node.res)
+            res.requests += reqs
+            res.per_fn_requests[fn] = \
+                res.per_fn_requests.get(fn, 0.0) + reqs
+            if lat > qos.qos(spec):
+                res.violated_requests += reqs
+                res.per_fn_violations[fn] = \
+                    res.per_fn_violations.get(fn, 0.0) + reqs
+                node_ok = False
+        scheduler.observe(node, node_ok, now)
 
 
 # ---------------------------------------------------------------------------

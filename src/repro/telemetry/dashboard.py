@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 import html
 import json
+import math
 import os
 import sys
 import time
@@ -576,6 +577,41 @@ def render(root: Optional[str] = None, events_dir: Optional[str] = None,
             cards.append(_card(
                 "Capacity-engine speedup vs legacy (latest run)",
                 _hbars(items) + table))
+    sc = benches.get("scaling")
+    if sc:
+        latest = _latest(sc)
+        rows = [r for r in latest.get("rows", [])
+                if r.get("target_nodes") and r.get("wall_s")]
+        if len(rows) >= 2:
+            series = {
+                "wall s": [(math.log10(r["target_nodes"]),
+                            math.log10(max(r["wall_s"], 1e-3)))
+                           for r in rows],
+                "ms/node": [(math.log10(r["target_nodes"]),
+                             math.log10(max(r["wall_ms_per_node"],
+                                            1e-6)))
+                            for r in rows],
+            }
+            ensure_slots(series)
+            met = latest.get("metrics", {})
+            table = _table(
+                ["target nodes", "cells", "mean nodes", "wall s",
+                 "ms/node", "density", "qos", "idle cell frac"],
+                [[r.get(k, "") for k in (
+                    "target_nodes", "cells", "mean_nodes", "wall_s",
+                    "wall_ms_per_node", "density", "qos_violation",
+                    "idle_cell_frac")] for r in rows])
+            cards.append(_card(
+                "Event-core scaling: fleet size vs wall clock "
+                "(log-log)",
+                _lines(series, slots, width=560,
+                       x_label="log10 target nodes", y_zero=False)
+                + table,
+                note=f"cell-sharded event core, per-node wall-clock "
+                     f"slope "
+                     f"{met.get('wallclock_per_node_slope', '?')} "
+                     f"(gated &lt; 1.0) · cells_parity="
+                     f"{met.get('cells_parity', '?')}"))
     cards.append(_density_over_time_panel(streams, slots, order))
     cards.append(_reasons_panel(streams))
     cards.append(_spans_panel(streams))

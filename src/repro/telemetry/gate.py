@@ -44,7 +44,7 @@ from .report import (bench_path, load_bench, promote_baseline,
                      repo_root)
 
 #: the studies verify.sh --bench gates by default
-DEFAULT_STUDIES = ("large_cluster", "capacity_engine")
+DEFAULT_STUDIES = ("large_cluster", "capacity_engine", "scaling")
 
 
 @dataclass
@@ -127,6 +127,17 @@ STUDY_RULES: Dict[str, StudyRules] = {
         metric_rules=[Rule("device_per_solve_slope", "max_abs", "slope",
                            hard=True),
                       Rule("tables_equal_all", "eq", None, hard=True)]),
+    "scaling": StudyRules(
+        key=("target_nodes",),
+        rules=[Rule("density", "min", "density", hard=True),
+               Rule("qos_violation", "max_abs", "qos", hard=True),
+               Rule("wall_ms_per_node", "max", "latency", hard=False)],
+        # the event core's headline: per-node wall-clock must stay
+        # sub-linear in fleet size, and the single-cell event loop must
+        # keep reproducing the legacy Simulation bit-for-bit
+        metric_rules=[Rule("wallclock_per_node_slope", "max_abs",
+                           "slope", hard=True),
+                      Rule("cells_parity", "eq", None, hard=True)]),
 }
 #: fallback for studies without registered rules: gate the headline
 #: metrics if the rows carry them

@@ -1,0 +1,252 @@
+"""Cell-sharded event-driven core (``repro.core.cells``).
+
+Tier-1 gates for the sharded control plane:
+
+  * **cells=1 bit-parity** — the single-cell ``CellSimulation`` (event
+    loop + dirty-set measurement over the exact legacy assembly) must
+    reproduce the legacy ``Simulation`` bit-for-bit on every
+    deterministic counter, for every headline scheduler.
+  * **Baseline reproduction** — the single-cell core must reproduce the
+    checked-in ``BENCH_large_cluster.json`` quick baseline's first row
+    exactly (the ISSUE's hard constraint: sharding must not move the
+    published numbers).
+  * **Event-queue determinism** — a multi-cell run is a deterministic
+    function of its seeds: two assemblies from the same world produce
+    identical counters, and the event gating really skips idle cells.
+  * ``CellRouter`` share conservation / identity passthrough,
+    ``CapacityExchange`` fanout, and the ``PlatformConfig.cells``
+    section wiring.
+"""
+import numpy as np
+import pytest
+
+from repro.core import make_scenario, scenario_simulation, scenario_world
+from repro.core.cells import (CapacityExchange, Cell, CellRouter,
+                              CellSimulation, cell_scenario_simulation)
+from repro.platform import Platform, PlatformConfigError
+
+SYSTEMS = ("k8s", "jiagu", "harvesting")
+
+
+def _det(res) -> dict:
+    """Deterministic run counters: everything except wall-clock fields
+    (latency percentiles differ between any two runs) and the
+    predictor's cumulative inference counters (accumulate across runs
+    sharing one world)."""
+    s, a = res.sched, res.scaling
+    return {
+        "requests": res.requests,
+        "violated_requests": res.violated_requests,
+        "per_fn_violations": dict(res.per_fn_violations),
+        "per_fn_requests": dict(res.per_fn_requests),
+        "instance_seconds": res.instance_seconds,
+        "node_seconds": res.node_seconds,
+        "nodes_peak": res.nodes_peak,
+        "density_series": list(res.density_series),
+        "decisions": s.decisions, "placed": s.instances_placed,
+        "fast": s.fast, "slow": s.slow, "failed": s.failed,
+        "real_cold": a.real_cold_starts,
+        "logical_cold": a.logical_cold_starts,
+        "blocked_logical": a.blocked_logical,
+        "migrations": a.migrations, "releases": a.releases,
+        "evictions": a.evictions,
+    }
+
+
+@pytest.fixture(scope="module")
+def parity_world():
+    scenario = make_scenario("burst-storm", n_functions=6, duration_s=80,
+                             target_nodes=16, seed=3)
+    world = scenario_world(scenario, n_train=600, n_trees=8)
+    return scenario, world
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_cells1_bit_parity(parity_world, system):
+    """cells=1 reproduces the legacy Simulation exactly — density, QoS,
+    and every scheduling/scaling counter."""
+    scenario, world = parity_world
+    world.gt.reseed()
+    legacy = scenario_simulation(scenario, system, world=world).run()
+    world.gt.reseed()
+    sharded = cell_scenario_simulation(scenario, system, n_cells=1,
+                                       world=world)
+    assert isinstance(sharded, CellSimulation)
+    assert len(sharded.cells) == 1
+    cells = sharded.run()
+    a, b = _det(legacy), _det(cells)
+    diverged = sorted(k for k in a if a[k] != b[k])
+    assert not diverged, f"{system} diverged on {diverged}"
+    assert legacy.density == cells.density
+    assert legacy.qos_violation_rate == cells.qos_violation_rate
+
+
+def test_cells1_reproduces_checked_in_quick_baseline():
+    """The checked-in BENCH_large_cluster.json quick baseline's first
+    sweep row (burst-storm@64, k8s — the first run against the fresh
+    shared world, so its ground-truth RNG stream starts at zero) must
+    be reproduced exactly by the single-cell event core."""
+    from benchmarks.large_cluster import study_spec
+    from repro.telemetry.report import load_bench
+
+    data = load_bench("large_cluster")
+    if data is None:
+        pytest.skip("no checked-in BENCH_large_cluster.json")
+    base = data["baseline"]
+    assert base["mode"] == "quick"
+    row = base["rows"][0]
+    assert (row["scenario"], row["target_nodes"], row["system"]) == \
+        ("burst-storm", 64, "k8s")
+    spec = study_spec(quick=True, seed=0)["base"]
+    scenario = make_scenario(
+        "burst-storm",
+        n_functions=spec["scenario"]["n_functions"],
+        duration_s=spec["scenario"]["duration_s"],
+        target_nodes=64, seed=spec["scenario"]["seed"],
+        spec_seed=spec["scenario"]["spec_seed"])
+    world = scenario_world(
+        scenario, n_train=spec["prediction"]["n_train"],
+        n_trees=spec["prediction"]["n_trees"])
+    res = cell_scenario_simulation(scenario, "k8s", n_cells=1,
+                                   world=world).run()
+    s = res.sched
+    got = {
+        "density": round(res.density, 3),
+        "qos_violation": round(res.qos_violation_rate, 4),
+        "mean_nodes": round(res.node_seconds / max(res.ticks, 1), 1),
+        "peak_nodes": res.nodes_peak,
+        "rows_per_schedule": round(
+            s.critical_inference_rows / max(s.decisions, 1), 2),
+        "fast_frac": round(s.fast / max(s.fast + s.slow, 1), 3),
+    }
+    want = {k: row[k] for k in got}
+    assert got == want
+
+
+def test_multicell_event_queue_determinism():
+    """A sharded run is a pure function of its seeds: two 3-cell
+    assemblies from one world produce identical deterministic counters,
+    the sparse trace leaves some cell-ticks idle (the event gating is
+    live), and the capacity exchange gossips."""
+    scenario = make_scenario("azure-sparse", n_functions=10,
+                             duration_s=80, target_nodes=12, seed=7)
+    world = scenario_world(scenario, n_train=600, n_trees=8)
+
+    def arm():
+        world.gt.reseed()
+        sim = cell_scenario_simulation(scenario, "jiagu", n_cells=3,
+                                       world=world)
+        res = sim.run()
+        return sim, _det(res)
+
+    sim1, a = arm()
+    sim2, b = arm()
+    assert a == b
+    assert len(sim1.cells) == 3
+    # the event gating must actually skip idle cell-ticks on the
+    # sparse long-tail population...
+    assert sim1.idle_cell_ticks > 0
+    assert sim1.idle_cell_ticks == sim2.idle_cell_ticks
+    # ...and solved capacities gossip across cells
+    assert sim1.exchange is not None
+    assert sim1.exchange.published > 0
+    assert sim1.exchange.fanout == \
+        sim1.exchange.published * (len(sim1.services()) - 1)
+
+
+def test_cell_router_identity_and_conservation():
+    scenario = make_scenario("burst-storm", n_functions=4, duration_s=20,
+                             target_nodes=8, seed=1)
+    fns = sorted(scenario.specs)
+
+    class _Scaler:
+        on_fn_dirty = None
+
+    def make_cell(i):
+        return Cell(i, scenario.build_cluster(8), None, _Scaler())
+
+    # single cell: the plan is the rps dict itself (no float math)
+    solo = CellRouter([make_cell(0)])
+    rps = {fns[0]: 3.0, fns[1]: 0.0}
+    assert solo.split(rps, scenario.specs) == [rps]
+
+    cells = [make_cell(0), make_cell(1)]
+    router = CellRouter(cells, load_cap=0.85)
+    # warm placements in both cells for fns[0]; fns[1] cold everywhere
+    for cell, k in ((cells[0], 3), (cells[1], 1)):
+        node = cell.cluster.add_node()
+        node.deploy(fns[0], k)
+    rps = {fns[0]: 500.0, fns[1]: 7.0, fns[2]: 0.0}
+    shares = router.split(rps, scenario.specs)
+    assert len(shares) == 2
+    # conservation: per-fn shares sum to the global rps exactly
+    total = sum(s.get(fns[0], 0.0) for s in shares)
+    assert total == pytest.approx(500.0, abs=1e-9)
+    # cold fn goes whole to its deterministic home cell
+    home = router.home(fns[1])
+    assert shares[home][fns[1]] == 7.0
+    assert fns[1] not in shares[1 - home]
+    # zero-rps fns appear nowhere
+    assert all(fns[2] not in s for s in shares)
+    # both warm cells carry some of the hot fn's load
+    assert all(s.get(fns[0], 0.0) > 0 for s in shares)
+
+
+def test_capacity_exchange_fanout_and_epoch():
+    class _Svc:
+        def __init__(self):
+            self.got = []
+            self.exchange = None
+
+        def accept_exchange(self, key, epoch, cap):
+            self.got.append((key, epoch, cap))
+
+    a, b, c = _Svc(), _Svc(), _Svc()
+    ex = CapacityExchange()
+    for svc in (a, b, c):
+        ex.join(svc)
+        assert svc.exchange is ex
+    ex.publish(a, "sig", 4, 11)
+    assert a.got == []
+    assert b.got == [("sig", 4, 11)]
+    assert c.got == [("sig", 4, 11)]
+    assert (ex.published, ex.fanout) == (1, 2)
+
+
+def test_prediction_service_accept_exchange_epoch_guard(parity_world):
+    """A gossiped capacity from a pre-retrain epoch must be dropped."""
+    scenario, world = parity_world
+    sim = cell_scenario_simulation(scenario, "jiagu", n_cells=2,
+                                   world=world)
+    svc = sim.services()[0]
+    key = ("made-up-signature",)
+    svc.accept_exchange(key, svc._epoch, 9)
+    assert svc._cache[key] == (svc._epoch, 9)
+    stale_key = ("stale-signature",)
+    svc.accept_exchange(stale_key, svc._epoch - 1, 9)
+    assert stale_key not in svc._cache
+
+
+def test_platform_cells_section():
+    base = {
+        "scenario": {"kind": "burst-storm", "n_functions": 4,
+                     "duration_s": 20, "target_nodes": 8, "seed": 0},
+        "scheduler": {"name": "jiagu"},
+        "prediction": {"n_train": 300, "n_trees": 8},
+    }
+    plat = Platform.build(config={**base, "cells": {"count": 2}})
+    assert isinstance(plat.simulation, CellSimulation)
+    assert len(plat.simulation.cells) == 2
+    res = plat.run(duration_s=10)
+    assert res.ticks == 10
+    assert np.isfinite(res.density)
+    # cells=1 (the default) keeps the legacy single-loop assembly
+    plat1 = Platform.build(config=base)
+    assert not isinstance(plat1.simulation, CellSimulation)
+    with pytest.raises(PlatformConfigError):
+        Platform.build(config={**base, "cells": {"count": 0}})
+    with pytest.raises(PlatformConfigError):
+        Platform.build(config={**base, "cells": {"load_cap": 1.5}})
+    with pytest.raises(PlatformConfigError):
+        Platform.build(config={**base, "cells": {"count": 2}},
+                       router=object())
