@@ -1,0 +1,282 @@
+"""Learned-policy study: collect DecisionTraces, train the MLP scorer,
+evaluate the ``"learned"`` stack against the hand-tuned baselines.
+
+Three phases, end to end through the ``repro.platform`` control plane:
+
+  1. **collect** — jiagu-pipeline runs with ``pipeline.trace_features``
+     on and a ``JsonlObserver`` attached; every decision's
+     pre-mutation candidate feature rows, the chosen node, and the
+     stages' feasibility rejections land in the event stream, plus the
+     cumulative QoS counters on every tick record.
+  2. **train** — ``repro.policy`` parses the streams back
+     (binder-rejected candidates are masked out of the label set — a
+     pointwise scorer cannot see capacity-solve feasibility and
+     serving re-applies it anyway), splits deterministically, and fits
+     the scorer twice: pure imitation, and the offline-RL mode that
+     down-weights decisions followed by QoS breaches / cold-start
+     scale-outs.  Both checkpoints land in an epoch-tagged
+     ``PolicyStore`` under ``benchmarks/artifacts/``.
+  3. **evaluate** — k8s / jiagu-pipeline / harvesting / learned run
+     the same held-out scenario on a shared world (``gt.reseed()`` per
+     system), the learned stack serving the stored imitation policy.
+
+Gates (recorded in ``BENCH_policy.json``, enforced by the telemetry
+regression gate and raised in-run):
+
+  * ``imitation_agreement`` — holdout top-1 agreement with the jiagu
+    pipeline's decisions must stay **>= 0.90** (the policy learned the
+    behaviour it imitates, not noise).
+  * ``learned_qos_excess`` — the learned stack's QoS violation rate
+    may not exceed the no-overcommit K8s baseline by more than the
+    gate's QoS tolerance (the safety envelope holds: the harvesting
+    binders bound every placement, the policy only orders feasible
+    candidates).
+  * ``learned_density_ratio`` — learned density must stay **>= 1.0x**
+    K8s (the learned ordering keeps the consolidation win).
+
+  PYTHONPATH=src python -m benchmarks.policy [--quick | --smoke]
+
+``--smoke`` (the ``scripts/verify.sh --policy`` arm) shrinks every
+phase to seconds, relaxes the agreement floor (too few decisions to
+meet the real bar), and writes no trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from .common import ARTIFACTS, emit, save_artifact
+
+from repro.platform import JsonlObserver, Platform, PlatformConfig
+from repro.policy import (PolicyStore, TrainConfig, load_traces, merge,
+                          split, train_policy)
+from repro.telemetry import RunReport, append_bench
+
+KIND = "burst-storm"
+#: holdout top-1 agreement with the traced jiagu decisions (hard gate;
+#: relaxed under --smoke, where the dataset is a few dozen decisions)
+AGREEMENT_MIN = 0.90
+AGREEMENT_MIN_SMOKE = 0.50
+#: learned QoS may exceed the K8s no-overcommit baseline by at most
+#: this (matches the telemetry gate's absolute QoS tolerance)
+QOS_EXCESS_MAX = 0.02
+#: learned density must reach at least this multiple of K8s density
+DENSITY_RATIO_MIN = 1.0
+
+EVAL_SYSTEMS = ("k8s", "jiagu-pipeline", "harvesting", "learned")
+
+
+def study_spec(quick: bool = False, seed: int = 0,
+               smoke: bool = False) -> dict:
+    collect_s = 120 if smoke else 600
+    return {
+        "seed": seed,
+        "collect_seeds": [seed] if smoke else [seed, seed + 1, seed + 2],
+        "collect": {
+            "scenario": {"kind": KIND, "n_functions": 16,
+                         "duration_s": collect_s, "target_nodes": 24,
+                         "seed": seed},
+            "scheduler": {"name": "jiagu-pipeline"},
+            "prediction": {"n_train": 600, "n_trees": 8},
+            "pipeline": {"trace_features": True},
+        },
+        "train": {"hidden": 64, "epochs": 10 if smoke else 40,
+                  "lr": 3e-3, "seeds": [0] if smoke else [0, 1, 2]},
+        "evaluate": {
+            "scenario": {"kind": KIND, "n_functions": 16,
+                         "duration_s": 60 if smoke
+                         else 300 if quick else 600,
+                         "target_nodes": 24, "seed": seed + 7},
+            "prediction": {"n_train": 600, "n_trees": 8},
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Phases
+# ---------------------------------------------------------------------------
+
+
+def collect(spec: dict, out_dir: str) -> list:
+    """Run the traced collection sweeps; return the JSONL paths."""
+    import copy
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for s in spec["collect_seeds"]:
+        manifest = copy.deepcopy(spec["collect"])
+        manifest["scenario"]["seed"] = s
+        path = os.path.join(out_dir, f"traces_s{s}.jsonl")
+        t0 = time.perf_counter()
+        with JsonlObserver(path) as obs:
+            plat = Platform.build(config=manifest, observers=[obs])
+            res = plat.run()
+        print(f"# collect seed={s}: {res.sched.decisions} decisions, "
+              f"density={res.density:.3f} "
+              f"qos={res.qos_violation_rate:.4f} "
+              f"({time.perf_counter() - t0:.1f}s) -> {path}", flush=True)
+        paths.append(path)
+    return paths
+
+
+def fit(spec: dict, paths: list, store_dir: str, smoke: bool = False
+        ) -> dict:
+    """Parse, split, train imitation + offline-RL; persist the better
+    imitation seed to the PolicyStore.  Returns the training metrics."""
+    ds = merge(load_traces(p) for p in paths)
+    train_ds, hold_ds = split(ds)
+    print(f"# dataset: {len(ds)} decisions "
+          f"({len(train_ds)} train / {len(hold_ds)} holdout), "
+          f"{ds.skipped_versionless} versionless skipped, "
+          f"{ds.skipped_unlabelled} unlabelled skipped", flush=True)
+    tr = spec["train"]
+    store = PolicyStore(store_dir)
+
+    def best(mode: str, **kw):
+        results = []
+        for s in tr["seeds"]:
+            cfg = TrainConfig(hidden=tr["hidden"], epochs=tr["epochs"],
+                              lr=tr["lr"], seed=s, mode=mode, **kw)
+            pol, met = train_policy(train_ds, hold_ds, cfg)
+            results.append((met.get("holdout_agreement",
+                                    met["train_agreement"]), pol, met))
+        return max(results, key=lambda r: r[0])
+
+    t0 = time.perf_counter()
+    agree_im, pol_im, met_im = best("imitation")
+    agree_rl, pol_rl, met_rl = best("offline-rl", qos_penalty=8.0,
+                                    cold_penalty=1.0)
+    store.save(pol_im, epoch=0, mode="imitation",
+               feature_names=ds.feature_names, metrics=met_im)
+    store.save(pol_rl, epoch=1, mode="offline-rl",
+               feature_names=ds.feature_names, metrics=met_rl)
+    print(f"# train: imitation holdout={agree_im:.4f} "
+          f"offline-rl holdout={agree_rl:.4f} "
+          f"({time.perf_counter() - t0:.1f}s) -> {store_dir}", flush=True)
+
+    floor = AGREEMENT_MIN_SMOKE if smoke else AGREEMENT_MIN
+    # explicit raise, not assert: the gate must fire under -O too
+    if agree_im < floor:
+        raise RuntimeError(
+            f"policy: imitation holdout agreement {agree_im:.4f} "
+            f"< {floor} — the scorer did not learn the traced "
+            f"behaviour")
+    return {
+        "n_decisions": len(ds),
+        "n_holdout": len(hold_ds),
+        "skipped_versionless": ds.skipped_versionless,
+        "skipped_unlabelled": ds.skipped_unlabelled,
+        "imitation_agreement": round(agree_im, 4),
+        "rl_agreement": round(agree_rl, 4),
+    }
+
+
+def evaluate(spec: dict, store_dir: str) -> list:
+    """All systems on one held-out scenario and shared world; the
+    learned stack serves the stored imitation policy (epoch 0)."""
+    import copy
+    rows = []
+    scenario = world = None
+    for system in EVAL_SYSTEMS:
+        manifest = copy.deepcopy(spec["evaluate"])
+        manifest["scheduler"] = {
+            "name": "learned" if system == "learned" else system}
+        if system == "learned":
+            manifest["policy"] = {"store": store_dir, "epoch": 0}
+        cfg = PlatformConfig.from_dict(manifest)
+        plat = Platform.build(scenario=scenario, config=cfg, world=world)
+        scenario, world = plat.scenario, plat.world
+        world.gt.reseed()
+        res = plat.run()
+        row = {
+            "system": system,
+            "density": round(res.density, 3),
+            "qos_violation": round(res.qos_violation_rate, 4),
+            "requests": round(res.requests, 1),
+            "decisions": res.sched.decisions,
+            "placed": res.sched.instances_placed,
+            "nodes_peak": res.nodes_peak,
+        }
+        if system == "learned":
+            stats = plat.scheduler.learned_scorer.stats
+            row["scored_batches"] = stats.batches
+            row["stale_serves"] = stats.stale_serves
+        rows.append(row)
+        print(f"# eval {system}: density={row['density']} "
+              f"qos={row['qos_violation']} "
+              f"decisions={row['decisions']}", flush=True)
+    return rows
+
+
+def run(quick: bool = False, seed: int = 0, bench: bool = False,
+        smoke: bool = False):
+    """Collect -> train -> evaluate; gate the learned stack against the
+    K8s baseline.  ``bench=True`` persists a ``RunReport`` into
+    ``BENCH_policy.json`` for the regression gate and the dashboard."""
+    spec = study_spec(quick=quick, seed=seed, smoke=smoke)
+    out_dir = os.path.join(ARTIFACTS, "policy")
+    store_dir = os.path.join(out_dir, "store")
+    paths = collect(spec, out_dir)
+    metrics = fit(spec, paths, store_dir, smoke=smoke)
+    rows = evaluate(spec, store_dir)
+    emit(rows)
+
+    by = {r["system"]: r for r in rows}
+    k8s, learned = by["k8s"], by["learned"]
+    qos_excess = round(
+        max(0.0, learned["qos_violation"] - k8s["qos_violation"]), 4)
+    density_ratio = round(
+        learned["density"] / max(k8s["density"], 1e-9), 4)
+    if qos_excess > QOS_EXCESS_MAX:
+        raise RuntimeError(
+            f"policy: learned QoS {learned['qos_violation']} exceeds "
+            f"the K8s baseline {k8s['qos_violation']} by {qos_excess} "
+            f"(> {QOS_EXCESS_MAX}) — the safety envelope broke")
+    if density_ratio < DENSITY_RATIO_MIN:
+        raise RuntimeError(
+            f"policy: learned density {learned['density']} is only "
+            f"{density_ratio}x K8s {k8s['density']} "
+            f"(< {DENSITY_RATIO_MIN}) — the consolidation win is gone")
+    if learned["stale_serves"] != 0:
+        raise RuntimeError(
+            f"policy: {learned['stale_serves']} stale-epoch serves — "
+            f"the hot-swap wiring lagged the service epoch")
+    metrics.update({
+        "learned_qos_excess": qos_excess,
+        "learned_density_ratio": density_ratio,
+        "stale_serves": learned["stale_serves"],
+    })
+    print(f"# policy gates: imitation_agreement="
+          f"{metrics['imitation_agreement']} "
+          f"qos_excess={qos_excess} (<= {QOS_EXCESS_MAX}) "
+          f"density_ratio={density_ratio}x (>= {DENSITY_RATIO_MIN}) "
+          f"stale_serves=0 => PASS", flush=True)
+
+    record = {"kind": KIND, "spec": spec, "trace_paths": paths,
+              "store": store_dir, "rows": rows, "metrics": metrics}
+    save_artifact("policy", record)
+    if bench:
+        report = RunReport.build(
+            "policy", mode="quick" if quick else "full",
+            manifest={"kind": KIND, "collect": spec["collect"],
+                      "train": spec["train"],
+                      "evaluate": spec["evaluate"]},
+            metrics=metrics, rows=rows)
+        path = append_bench(report)
+        print(f"# bench: appended {report.mode} run "
+              f"({len(rows)} rows, git {report.git_sha}) -> {path}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="300-tick evaluation (full: 600)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale phases, relaxed agreement "
+                         "floor, no trajectory write "
+                         "(scripts/verify.sh --policy)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke, seed=args.seed,
+        bench=not args.smoke)

@@ -32,6 +32,13 @@
 #                                the cells=1 bit-parity gate, no
 #                                trajectory write
 #                                (python -m benchmarks.scaling --smoke)
+#   scripts/verify.sh --policy   learned-scheduler smoke: collect
+#                                DecisionTraces, train the MLP scorer,
+#                                serve it through the "learned" stack
+#                                and gate QoS/density against K8s with
+#                                zero stale-epoch serves, seconds-scale
+#                                phases, no trajectory write
+#                                (python -m benchmarks.policy --smoke)
 # The platform smoke step builds every registered scheduler — the four
 # legacy ones, their pipeline-stack re-expressions, and the harvesting
 # scheduler — against one scenario from pure PlatformConfig manifest
@@ -48,6 +55,7 @@ run_bench_gate() {
     python -m benchmarks.large_cluster --quick
     python -m benchmarks.capacity_engine --quick
     python -m benchmarks.scaling --quick
+    python -m benchmarks.policy --quick
     # ...the gate diffs the fresh runs against the checked-in baselines
     # (hard-fails on density/QoS regressions; generous slack on the
     # wall-clock latency percentiles)...
@@ -64,6 +72,11 @@ fi
 if [ "${1:-}" = "--scale" ]; then
     shift
     python -m benchmarks.scaling --smoke
+    exit 0
+fi
+if [ "${1:-}" = "--policy" ]; then
+    shift
+    python -m benchmarks.policy --smoke
     exit 0
 fi
 if [ "${1:-}" = "--full" ]; then

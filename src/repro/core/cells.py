@@ -279,6 +279,9 @@ class CellSimulation:
     def run(self, duration_s: Optional[int] = None) -> SimResult:
         T = duration_s or self.trace.duration_s
         res = SimResult(name=self.cells[0].scheduler.name, ticks=T)
+        #: observers read the accumulating result mid-run (tick records
+        #: carry cumulative QoS counters for offline outcome labelling)
+        self.live_result = res
         services = self._services()
         svc0 = [s.stats.snapshot() for s in services]
         for t in range(T):
@@ -333,6 +336,7 @@ class CellSimulation:
                 res.stale_epoch_hits += int(
                     st["stale_epoch_hits"]
                     - s0.get("stale_epoch_hits", 0))
+        self.events.on_result(res)
         return res
 
     # ------------------------------------------------------------------

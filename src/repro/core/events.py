@@ -17,6 +17,10 @@ without the run loop knowing who is listening:
     ``"release"``, ``"evict"``, or ``"migrate"``,
   * ``on_retrain(service)``      — the prediction service's online
     retraining policy fired (forest refit + epoch bump + cache clear),
+  * ``on_result(result)``        — the run completed; ``result`` is the
+    final ``SimResult`` (cumulative density/QoS counters), emitted once
+    at the end of ``Simulation.run`` / ``CellSimulation.run`` so JSONL
+    artifacts carry their own outcome record,
   * ``on_span(span)``            — a control-plane span closed
     (``repro.telemetry.spans``): wall-clock + counter deltas for
     ``schedule`` / ``retrain`` / ``capacity_solve`` sections, persisted
@@ -55,6 +59,9 @@ class Observer:
         pass
 
     def on_retrain(self, service) -> None:
+        pass
+
+    def on_result(self, result) -> None:
         pass
 
     def on_span(self, span) -> None:
@@ -98,6 +105,10 @@ class EventHub(Observer):
     def on_retrain(self, service) -> None:
         for o in self.observers:
             o.on_retrain(service)
+
+    def on_result(self, result) -> None:
+        for o in self.observers:
+            o.on_result(result)
 
     def on_span(self, span) -> None:
         for o in self.observers:
@@ -183,9 +194,17 @@ class JsonlObserver(Observer):
             return
         nodes = len(sim.cluster.nodes)
         inst = sim.cluster.total_instances()
-        self._write({"event": "tick", "now": now, "nodes": nodes,
-                     "instances": inst,
-                     "density": inst / nodes if nodes else 0.0})
+        rec = {"event": "tick", "now": now, "nodes": nodes,
+               "instances": inst,
+               "density": inst / nodes if nodes else 0.0}
+        # cumulative QoS counters so offline readers can label each
+        # decision with "breach within horizon" by windowed deltas
+        # instead of re-running the simulation
+        live = getattr(sim, "live_result", None)
+        if live is not None:
+            rec["requests"] = round(live.requests, 3)
+            rec["violated"] = round(live.violated_requests, 3)
+        self._write(rec)
 
     def on_schedule(self, now: float, fn: str, placements,
                     trace=None) -> None:
@@ -207,6 +226,22 @@ class JsonlObserver(Observer):
         self._write({"event": "retrain", "epoch": service.epoch,
                      "retrains": service.stats.retrains,
                      "samples": service.predictor.n_samples})
+
+    def on_result(self, result) -> None:
+        self._write({
+            "event": "summary",
+            "scheduler": result.name,
+            "ticks": result.ticks,
+            "density": round(result.density, 4),
+            "qos_violation_rate": round(result.qos_violation_rate, 6),
+            "requests": round(result.requests, 3),
+            "violated_requests": round(result.violated_requests, 3),
+            "nodes_peak": result.nodes_peak,
+            "per_fn_violation_rate": {
+                fn: round(r, 6)
+                for fn, r in sorted(result.per_fn_violation_rate().items())
+            },
+        })
 
     def on_span(self, span) -> None:
         self._write({"event": "span", **span.to_dict()})

@@ -46,6 +46,7 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional,
                     Protocol, Sequence, Tuple, runtime_checkable)
 
 from .cluster import Node
+from .prediction_service import REFERENCE_NODE
 from .scheduler import (FAST_PATH_MS, BaseScheduler, GsightScheduler,
                         JiaguScheduler, K8sScheduler, OwlScheduler,
                         Placement, make_gsight_scheduler,
@@ -57,6 +58,13 @@ from .scheduler import (FAST_PATH_MS, BaseScheduler, GsightScheduler,
 TRACE_SAMPLES = 8
 TRACE_SCORES = 16
 TRACE_TOP_SCORES = 4
+
+#: DecisionTrace serialization schema.  v1 records (no
+#: ``schema_version`` key) carried score terms only; v2 adds the
+#: per-candidate raw feature vectors + chosen node that make JSONL
+#: streams a reusable offline training dataset (``repro.policy``).
+#: Readers must keep accepting versionless (v1) records.
+TRACE_SCHEMA_VERSION = 2
 
 
 # ---------------------------------------------------------------------------
@@ -105,31 +113,60 @@ class DecisionTrace:
     placed: int = 0
     failed: int = 0
     latency_ms: float = 0.0
+    schema_version: int = TRACE_SCHEMA_VERSION
     pre_decision: List[TraceBinding] = field(default_factory=list)
     bindings: List[TraceBinding] = field(default_factory=list)
     filtered: Dict[str, int] = field(default_factory=dict)
     filtered_samples: List[Tuple[int, str]] = field(default_factory=list)
     scored: List[Tuple[str, int, Any]] = field(default_factory=list)
+    #: per-candidate raw feature vectors captured at decision start
+    #: (before any binding mutated the cluster): [(node_id, row), ...].
+    #: Empty unless the scheduler opts into ``trace_features`` — the
+    #: capture costs O(nodes) per decision and exists to feed
+    #: ``repro.policy`` training, not routine observability.
+    candidates: List[Tuple[int, List[float]]] = field(default_factory=list)
+    #: node that received this decision's first binding (-1 when the
+    #: decision failed outright) — the imitation-learning label
+    chosen_node: int = -1
+    #: every node id any stage rejected during the decision (filters
+    #: AND binder refusals — capacity solves, mem room).  Only
+    #: populated under ``trace_features``: offline training masks these
+    #: out, because a pointwise scorer cannot see binder feasibility
+    #: and must not be penalized for ranking an infeasible node first
+    #: (serving re-applies the same binder checks anyway).
+    rejected: List[int] = field(default_factory=list)
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["filtered_samples"] = [list(s) for s in self.filtered_samples]
         d["scored"] = [[p, n, _jsonable(s)] for p, n, s in self.scored]
+        d["candidates"] = [[nid, list(row)] for nid, row in self.candidates]
         return d
 
     def summary(self) -> Dict[str, Any]:
         """Compact form for event streams: totals + reasons, no
-        per-candidate detail."""
-        return {
+        per-candidate detail — except the feature rows, which ride along
+        when captured (they ARE the payload of a feature-tracing run)."""
+        out = {
             "scheduler": self.scheduler, "fn": self.fn, "now": self.now,
             "requested": self.requested, "placed": self.placed,
             "failed": self.failed, "mode": self.mode,
             "latency_ms": round(self.latency_ms, 4),
+            "schema_version": self.schema_version,
             "fast_bindings": len(self.pre_decision),
             "bindings": [[b.stage, b.node_id, b.count]
                          for b in self.bindings],
             "filtered": dict(self.filtered),
         }
+        if self.candidates:
+            out["candidates"] = [
+                [nid, [round(float(v), 5) for v in row]]
+                for nid, row in self.candidates]
+            out["chosen_node"] = self.chosen_node
+            out["rejected"] = sorted(set(self.rejected))
+            out["scale_out"] = any(
+                "scale-out" in b.stage for b in self.bindings)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +271,8 @@ class DecisionContext:
         t.filtered[reason] = t.filtered.get(reason, 0) + 1
         if len(t.filtered_samples) < TRACE_SAMPLES:
             t.filtered_samples.append((node.id, reason))
+        if self.sched.trace_features:
+            t.rejected.append(node.id)
 
     def place(self, node: Node, k: int, stage: str, *,
               capacity: Optional[int] = None,
@@ -253,6 +292,66 @@ class DecisionContext:
             rec = TraceBinding(stage, node.id, k, self.decision_ms,
                                capacity, room_before)
             (t.pre_decision if pre else t.bindings).append(rec)
+
+
+# ---------------------------------------------------------------------------
+# Candidate features (the repro.policy training input schema)
+# ---------------------------------------------------------------------------
+
+#: fixed-width per-candidate feature layout, version-locked to
+#: ``TRACE_SCHEMA_VERSION``: training datasets, stored policies and the
+#: serving-time scorer all key off this tuple, so a layout change must
+#: bump the trace schema
+CANDIDATE_FEATURES = (
+    "has_fn",             # node already hosts the function
+    "fn_n_sat",           # its saturated instances of fn
+    "fn_n_cached",        # its cached instances of fn
+    "n_instances",        # total instances on the node
+    "n_functions",        # distinct live functions on the node
+    "mem_room",           # instances of fn the free memory still fits
+    "cpu_requested_frac",  # requested CPU / node CPU (overcommit depth)
+    "mem_used_frac",      # used memory / node memory
+    "table_capacity",     # capacity-table entry for fn (-1 = absent)
+    "table_fresh",        # 1 when that entry is fresh
+    "table_room",         # entry.capacity - n_sat - n_cached (-1 absent)
+    "cpu_norm",           # node CPU vs the reference profiling shape
+    "mem_norm",           # node memory vs the reference shape
+    "requested",          # instances this decision is placing
+)
+
+
+def candidate_feature_row(ctx: DecisionContext,
+                          node: Node) -> List[float]:
+    """One candidate node's raw feature vector for the decision in
+    ``ctx`` — the row DecisionTrace JSONL records carry (schema v2) and
+    the learned scorer consumes at serving time.  Read-only: the same
+    cluster state the filters/scorers see, captured before any binding
+    mutates it."""
+    specs = ctx.cluster.specs
+    st = node.funcs.get(ctx.fn)
+    n_sat = float(st.n_sat) if st is not None else 0.0
+    n_cached = float(st.n_cached) if st is not None else 0.0
+    entry = node.table.get(ctx.fn)
+    cap = float(entry.capacity) if entry is not None else -1.0
+    fresh = 1.0 if entry is not None and entry.fresh else 0.0
+    room = (entry.capacity - n_sat - n_cached) \
+        if entry is not None else -1.0
+    return [
+        1.0 if st is not None and st.total > 0 else 0.0,
+        n_sat,
+        n_cached,
+        float(node.n_instances()),
+        float(sum(1 for s in node.funcs.values() if s.total > 0)),
+        float(ctx.mem_room(node)),
+        node.cpu_requested(specs) / node.res.cpu_mcores,
+        node.mem_used(specs) / node.res.mem_mb,
+        cap,
+        fresh,
+        float(room),
+        node.res.cpu_mcores / REFERENCE_NODE.cpu_mcores,
+        node.res.mem_mb / REFERENCE_NODE.mem_mb,
+        float(ctx.count),
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +396,12 @@ class CandidatePass:
             keep.append(node)
         if self.scorer is not None:
             scorer = self.scorer
-            scores = [scorer.score(ctx, n) for n in keep]
+            # batching scorers (the learned policy's jitted forward)
+            # score the whole surviving candidate set in one call;
+            # plain scorers stay one-node functions
+            batch = getattr(scorer, "score_batch", None)
+            scores = batch(ctx, keep) if batch is not None \
+                else [scorer.score(ctx, n) for n in keep]
             # stable descending order: ties keep enumeration order,
             # exactly the legacy sorted(key=-x) semantics
             order = sorted(range(len(keep)), key=scores.__getitem__,
@@ -339,11 +443,21 @@ class SchedulingPipeline:
             mode="per-instance" if self.per_instance else "batched") \
             if sched.trace_decisions else None
         ctx = DecisionContext(sched, fn, count, now, trace)
+        if trace is not None and sched.trace_features:
+            # snapshot every node's raw feature row BEFORE any stage
+            # mutates the cluster: this is the training input the
+            # decision was actually made against (repro.policy)
+            trace.candidates = [
+                (node.id, candidate_feature_row(ctx, node))
+                for node in ctx.cluster.nodes.values()]
         if self.per_instance:
             self._run_per_instance(ctx)
         else:
             self._run_batched(ctx)
         if trace is not None:
+            first = trace.pre_decision[0] if trace.pre_decision else \
+                trace.bindings[0] if trace.bindings else None
+            trace.chosen_node = first.node_id if first is not None else -1
             sched.last_trace = trace
         return ctx.placements
 
@@ -897,6 +1011,8 @@ register_scheduler(
 
 
 __all__ = [
+    "TRACE_SCHEMA_VERSION", "CANDIDATE_FEATURES",
+    "candidate_feature_row",
     "DecisionTrace", "TraceBinding", "DecisionContext",
     "NodeFilter", "NodeScorer", "Binder", "PreDecision",
     "CandidatePass", "SchedulingPipeline", "PipelineHostMixin",

@@ -68,6 +68,9 @@ from .pipeline import (Binder, CandidatePass, DecisionContext,
                        TraceBinding)
 from .pipeline import BreachAwareReleasePicker
 from .harvesting import CooldownLogicalStartPicker, HarvestingScheduler
+# importing the policy stage registers the "learned" scheduler stack
+# (JAX stays un-imported until real weights swap in)
+from ..policy.stage import LearnedScheduler, LearnedScorer
 from ..telemetry import Telemetry, publish_result
 
 
@@ -197,6 +200,7 @@ register_stage("logical-start", "table-bound",
                TableBoundLogicalStartPicker)
 register_stage("logical-start", "cooldown-table-bound",
                CooldownLogicalStartPicker)
+register_stage("scorer", "learned", lambda sched: LearnedScorer())
 
 
 # ---------------------------------------------------------------------------
@@ -312,6 +316,28 @@ class PipelineSection:
     decision_traces: Optional[bool] = None
     release_picker: Optional[str] = None       # stage registry name
     logical_start_picker: Optional[str] = None  # stage registry name
+    #: additionally snapshot per-candidate raw feature vectors + the
+    #: chosen node into every trace (``repro.policy`` dataset
+    #: collection; implies ``decision_traces``).  O(nodes) per
+    #: decision, so off by default.
+    trace_features: bool = False
+
+
+@dataclass
+class PolicySection:
+    """Learned-scorer serving (``repro.policy``): where to load trained
+    weights from and how they track retrains.
+
+    ``store=None`` (default) leaves the ``"learned"`` stack on its
+    built-in heuristic — buildable with no artifact on disk; ``epoch``
+    pins a stored epoch (None loads the latest); ``hot_swap`` wires a
+    PredictionService retrain listener that reloads/re-tags the scorer
+    synchronously with every epoch bump, keeping stale-epoch serves at
+    zero."""
+
+    store: Optional[str] = None
+    epoch: Optional[int] = None
+    hot_swap: bool = True
 
 
 @dataclass
@@ -369,6 +395,7 @@ _SECTIONS = {
     "scaling": ScalingSection,
     "prediction": PredictionSection,
     "pipeline": PipelineSection,
+    "policy": PolicySection,
     "simulation": SimulationSection,
     "telemetry": TelemetrySection,
     "cells": CellsSection,
@@ -414,6 +441,7 @@ class PlatformConfig:
     scaling: ScalingSection = field(default_factory=ScalingSection)
     prediction: PredictionSection = field(default_factory=PredictionSection)
     pipeline: PipelineSection = field(default_factory=PipelineSection)
+    policy: PolicySection = field(default_factory=PolicySection)
     simulation: SimulationSection = field(default_factory=SimulationSection)
     telemetry: TelemetrySection = field(default_factory=TelemetrySection)
     cells: CellsSection = field(default_factory=CellsSection)
@@ -462,6 +490,16 @@ class PlatformConfig:
             get_stage("release", self.pipeline.release_picker)
         if self.pipeline.logical_start_picker is not None:
             get_stage("logical-start", self.pipeline.logical_start_picker)
+        if self.policy.epoch is not None and self.policy.store is None:
+            raise PlatformConfigError(
+                "policy.epoch pins a stored policy but policy.store is "
+                "unset; point it at a PolicyStore directory")
+        if self.pipeline.decision_traces is False \
+                and self.pipeline.trace_features:
+            raise PlatformConfigError(
+                "pipeline.trace_features captures per-candidate rows "
+                "into decision traces; it cannot be combined with "
+                "decision_traces=False")
         if p.learned_shape_margin and p.schema_version == 1:
             raise PlatformConfigError(
                 "prediction.learned_shape_margin needs the node-shape-"
@@ -722,12 +760,52 @@ class Platform:
         for sched in scheds:
             sched.trace_decisions = pl.decision_traces \
                 if pl.decision_traces is not None else bool(hub.observers)
+            if pl.trace_features:
+                # dataset collection: feature capture needs the traces
+                # it annotates
+                sched.trace_decisions = True
+                sched.trace_features = True
             if pl.release_picker is not None:
                 sched.release_stage = \
                     get_stage("release", pl.release_picker)(sched)
             if pl.logical_start_picker is not None:
                 sched.logical_start_stage = \
                     get_stage("logical-start", pl.logical_start_picker)(sched)
+        # policy section: install stored weights into any learned
+        # scorer and keep its epoch tag in lockstep with the service's
+        # (the listener runs inside the same synchronous retrain call
+        # that bumps the epoch — zero stale-epoch serves)
+        pol = cfg.policy
+        learned = [s for s in scheds
+                   if getattr(s, "learned_scorer", None) is not None]
+        if learned:
+            params = None
+            if pol.store is not None:
+                from ..policy.store import PolicyStore
+                params, _meta = PolicyStore(pol.store).load(
+                    epoch=pol.epoch)
+            for s in learned:
+                svc = s.prediction_service
+                epoch0 = svc.epoch if svc is not None else 0
+                if params is not None:
+                    s.learned_scorer.swap(params, epoch0)
+                else:
+                    s.learned_scorer.expect(epoch0)
+                if pol.hot_swap and svc is not None:
+                    def _resync(service, scorer=s.learned_scorer,
+                                store=pol.store, pin=pol.epoch):
+                        p = scorer.policy
+                        if store is not None and pin is None:
+                            from ..policy.store import PolicyStore
+                            try:
+                                p, _ = PolicyStore(store).load()
+                            except FileNotFoundError:
+                                p = scorer.policy
+                        if p is not None:
+                            scorer.swap(p, service.epoch)
+                        else:
+                            scorer.expect(service.epoch)
+                    svc.add_retrain_listener(_resync)
         return cls(cfg, scenario, world, simulation, hub,
                    telemetry=telemetry)
 
@@ -795,8 +873,8 @@ __all__ = [
     "Platform", "PlatformConfig", "PlatformConfigError",
     "ClusterSection", "ScenarioSection", "SchedulerSection",
     "ScalingSection", "PredictionSection", "PipelineSection",
-    "SimulationSection", "TelemetrySection", "NodeClassConfig",
-    "CellsSection",
+    "PolicySection", "SimulationSection", "TelemetrySection",
+    "NodeClassConfig", "CellsSection",
     # sharded control plane
     "Cell", "CellRouter", "CellSimulation", "CapacityExchange",
     "cell_scenario_simulation",
@@ -808,7 +886,7 @@ __all__ = [
     "NodeFilter", "NodeScorer", "Binder", "PreDecision",
     "DecisionContext", "DecisionTrace", "TraceBinding",
     "CandidatePass", "SchedulingPipeline", "PipelineHostMixin",
-    "HarvestingScheduler",
+    "HarvestingScheduler", "LearnedScheduler", "LearnedScorer",
     # observers
     "Observer", "EventHub", "JsonlObserver",
     # registries

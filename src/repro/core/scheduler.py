@@ -83,6 +83,14 @@ class BaseScheduler:
     #: ``pipeline.decision_traces`` forces it); standalone consumers
     #: set the attribute directly.
     trace_decisions = False
+    #: additionally snapshot every node's raw candidate feature vector
+    #: (``pipeline.candidate_feature_row``) and the chosen node into
+    #: each ``DecisionTrace`` — the ``repro.policy`` training input.
+    #: Off by default: the capture costs O(nodes) per decision, so only
+    #: dataset-collection runs opt in (``PlatformConfig
+    #: pipeline.trace_features``).  Implies nothing unless
+    #: ``trace_decisions`` is also on.
+    trace_features = False
 
     def __init__(self, cluster: Cluster, store: ProfileStore,
                  qos: QoSStore):

@@ -263,6 +263,9 @@ class Simulation:
     def run(self, duration_s: Optional[int] = None) -> SimResult:
         T = duration_s or self.trace.duration_s
         res = SimResult(name=self.scheduler.name, ticks=T)
+        #: observers read the accumulating result mid-run (tick records
+        #: carry cumulative QoS counters for offline outcome labelling)
+        self.live_result = res
         svc0 = self._service.stats.snapshot() if self._service else {}
         for t in range(T):
             now = float(t)
@@ -310,6 +313,7 @@ class Simulation:
                 st["refresh_time_s"] - svc0.get("refresh_time_s", 0.0)
             res.stale_epoch_hits = int(
                 st["stale_epoch_hits"] - svc0.get("stale_epoch_hits", 0))
+        self.events.on_result(res)
         return res
 
     # ------------------------------------------------------------------

@@ -1,0 +1,45 @@
+"""``repro.policy`` — learned scheduling policy, trained from
+DecisionTraces and served as a hot-swappable pipeline stage.
+
+Production-style split:
+
+  * ``dataset`` — DecisionTrace JSONL -> feature matrices + labels +
+    outcome annotations, deterministic train/holdout split,
+  * ``train``   — small JAX MLP scorer; imitation of jiagu traces,
+    plus an offline-RL mode with QoS/cold-start-penalized weighting,
+  * ``store``   — versioned, epoch-tagged ``.npz`` persistence,
+  * ``stage``   — the ``LearnedScorer`` pipeline stage and the
+    registered ``"learned"`` scheduler stack, hot-swapped through the
+    PredictionService retrain-epoch machinery.
+
+``train`` is re-exported lazily: importing the package (which the
+platform registry does on every build) must not pull JAX in.
+"""
+from .dataset import (DecisionRecord, PolicyDataset, load_traces,
+                      matrices, merge, normalization, reward_weights,
+                      split)
+from .stage import LearnedScheduler, LearnedScorer, ScorerStats
+from .store import POLICY_SCHEMA, PolicyStore, PolicyStoreError
+
+#: lazy re-exports from ``.train`` (maps public name -> attribute
+#: there; ``train_policy`` avoids shadowing the submodule itself)
+_LAZY = {"TrainConfig": "TrainConfig", "train_policy": "train",
+         "top1_agreement": "top1_agreement", "np_scores": "np_scores",
+         "forward": "forward", "init_params": "init_params"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(".train", __name__)
+        return getattr(mod, _LAZY[name])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "DecisionRecord", "PolicyDataset", "load_traces", "matrices",
+    "merge", "normalization", "reward_weights", "split",
+    "LearnedScheduler", "LearnedScorer", "ScorerStats",
+    "POLICY_SCHEMA", "PolicyStore", "PolicyStoreError",
+    *sorted(_LAZY),
+]

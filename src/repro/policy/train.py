@@ -1,0 +1,189 @@
+"""Train a learned ``NodeScorer`` from parsed DecisionTraces.
+
+The model is deliberately small: a two-hidden-layer tanh MLP mapping
+one candidate's 14 raw features (``pipeline.CANDIDATE_FEATURES``) to a
+scalar score; a decision scores all candidates and a masked softmax
+over the scores is the placement distribution.  Two training modes:
+
+  * ``imitation``  — weighted cross-entropy against the logged
+    (jiagu) chosen node, every decision weight 1.  This is the
+    behaviour-cloning baseline the acceptance gate measures (top-1
+    agreement on the deterministic holdout split).
+  * ``offline-rl`` — the same loss under advantage-style reward
+    weights (``dataset.reward_weights``): decisions followed by a QoS
+    breach within the horizon, or which paid a cold-start scale-out,
+    are down-weighted, so the policy prefers the trace's good outcomes
+    (one-step weighted regression, the standard offline approach when
+    the behaviour policy is near-expert — no bootstrapping, no
+    off-distribution actions).
+
+Optimization reuses ``repro.optim.adamw`` (warmup+cosine, global-norm
+clip, decoupled decay — biases escape decay by name, and the ``mu`` /
+``sd`` normalization stats live *outside* the trainable tree entirely
+so they are neither updated nor decayed).  Training is deterministic
+under a fixed config: numpy RNG for init/shuffling, single jitted step
+with fixed batch shapes.  JAX is imported lazily so merely importing
+``repro.policy`` (e.g. via the platform registry) stays cheap.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from .dataset import PolicyDataset, matrices, normalization, reward_weights
+
+#: parameter keys updated by the optimizer ("bias*" escapes weight
+#: decay by adamw's name rule; ``mu`` / ``sd`` are excluded entirely)
+TRAINABLE_KEYS = ("w1", "bias1", "w2", "bias2", "w3", "bias3")
+
+
+@dataclass
+class TrainConfig:
+    hidden: int = 32
+    epochs: int = 10
+    batch_size: int = 128
+    lr: float = 0.01
+    weight_decay: float = 1e-4
+    seed: int = 0
+    mode: str = "imitation"          # or "offline-rl"
+    qos_penalty: float = 3.0         # offline-rl breach down-weight
+    cold_penalty: float = 0.5        # offline-rl cold-start down-weight
+
+
+def init_params(n_features: int, hidden: int, seed: int
+                ) -> Dict[str, np.ndarray]:
+    """Deterministic fan-in-scaled init (numpy RNG, not JAX keys — the
+    policy store round-trips plain float32 arrays)."""
+    rng = np.random.default_rng(seed)
+    def w(shape):
+        return rng.normal(0.0, 1.0 / math.sqrt(shape[0]),
+                          shape).astype(np.float32)
+    return {
+        "w1": w((n_features, hidden)),
+        "bias1": np.zeros(hidden, np.float32),
+        "w2": w((hidden, hidden)),
+        "bias2": np.zeros(hidden, np.float32),
+        "w3": w((hidden, 1)),
+        "bias3": np.zeros(1, np.float32),
+    }
+
+
+def forward(policy: Dict[str, Any], x):
+    """Per-candidate scores, jnp math (jit-safe; ``x`` is [..., F]).
+
+    Normalization is part of the policy — serving applies exactly the
+    transform training fit, no separate scaler artifact."""
+    import jax.numpy as jnp
+    z = (x - policy["mu"]) / policy["sd"]
+    h = jnp.tanh(z @ policy["w1"] + policy["bias1"])
+    h = jnp.tanh(h @ policy["w2"] + policy["bias2"])
+    return (h @ policy["w3"] + policy["bias3"])[..., 0]
+
+
+def np_scores(policy: Dict[str, np.ndarray], x: np.ndarray) -> np.ndarray:
+    """The same forward in numpy — lets evaluation and tests run
+    without touching JAX (argmax agreement is insensitive to the tiny
+    tanh ULP differences between the two stacks)."""
+    z = (x - policy["mu"]) / policy["sd"]
+    h = np.tanh(z @ policy["w1"] + policy["bias1"])
+    h = np.tanh(h @ policy["w2"] + policy["bias2"])
+    return (h @ policy["w3"] + policy["bias3"])[..., 0]
+
+
+def top1_agreement(policy: Dict[str, np.ndarray], X: np.ndarray,
+                   mask: np.ndarray, y: np.ndarray) -> float:
+    """Fraction of decisions whose argmax score picks the logged node."""
+    if len(y) == 0:
+        return 0.0
+    s = np_scores(policy, X) - 1e9 * (1.0 - mask)
+    return float((s.argmax(axis=-1) == y).mean())
+
+
+def train(train_ds: PolicyDataset,
+          holdout_ds: Optional[PolicyDataset] = None,
+          cfg: Optional[TrainConfig] = None
+          ) -> Tuple[Dict[str, np.ndarray], Dict[str, float]]:
+    """Fit the scorer; returns ``(policy, metrics)``.
+
+    ``policy`` is a plain dict of float32 numpy arrays (weights +
+    ``mu``/``sd``) — exactly what ``PolicyStore.save`` persists and
+    ``stage.LearnedScorer.swap`` serves."""
+    import jax
+    import jax.numpy as jnp
+    from ..optim import adamw
+
+    cfg = cfg or TrainConfig()
+    if len(train_ds) == 0:
+        raise ValueError("policy.train: empty training dataset")
+    C = max(train_ds.max_candidates,
+            holdout_ds.max_candidates if holdout_ds else 0, 1)
+    X, mask, y = matrices(train_ds, n_candidates=C)
+    if cfg.mode == "offline-rl":
+        w = reward_weights(train_ds, qos_penalty=cfg.qos_penalty,
+                           cold_penalty=cfg.cold_penalty)
+    elif cfg.mode == "imitation":
+        w = np.ones(len(X), np.float32)
+    else:
+        raise ValueError(f"policy.train: unknown mode {cfg.mode!r} "
+                         f"(imitation | offline-rl)")
+    mu, sd = normalization(X, mask)
+    stats = {"mu": jnp.asarray(mu), "sd": jnp.asarray(sd)}
+    params = {k: jnp.asarray(v) for k, v in
+              init_params(train_ds.n_features, cfg.hidden,
+                          cfg.seed).items()}
+
+    N = len(X)
+    B = min(cfg.batch_size, N)
+    steps_per_epoch = (N + B - 1) // B
+    n_steps = max(cfg.epochs * steps_per_epoch, 1)
+    acfg = adamw.AdamWConfig(
+        lr=cfg.lr, weight_decay=cfg.weight_decay, clip_norm=1.0,
+        warmup_steps=min(20, max(n_steps // 10, 1)),
+        total_steps=n_steps, min_lr_frac=0.1)
+    opt = adamw.init(params, acfg)
+
+    def loss_fn(p, xb, mb, yb, wb):
+        logits = forward({**p, **stats}, xb) + (mb - 1.0) * 1e9
+        logz = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logz, yb[:, None], axis=-1)[:, 0]
+        return jnp.sum(nll * wb) / jnp.maximum(jnp.sum(wb), 1e-9)
+
+    @jax.jit
+    def step(p, o, xb, mb, yb, wb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, mb, yb, wb)
+        p, o, _ = adamw.update(p, grads, o, acfg)
+        return p, o, loss
+
+    rng = np.random.default_rng(cfg.seed)
+    last_loss = float("nan")
+    for _epoch in range(cfg.epochs):
+        order = rng.permutation(N)
+        for s0 in range(0, N, B):
+            idx = order[s0:s0 + B]
+            if len(idx) < B:           # fixed shapes: wrap the tail
+                idx = np.concatenate([idx, order[:B - len(idx)]])
+            params, opt, loss = step(
+                params, opt, jnp.asarray(X[idx]), jnp.asarray(mask[idx]),
+                jnp.asarray(y[idx]), jnp.asarray(w[idx]))
+        last_loss = float(loss)
+
+    policy = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    policy["mu"], policy["sd"] = mu, sd
+    metrics = {
+        "loss": last_loss,
+        "mode_weight_mean": float(w.mean()),
+        "n_train": float(N),
+        "train_agreement": top1_agreement(policy, X, mask, y),
+    }
+    if holdout_ds is not None and len(holdout_ds):
+        Xh, mh, yh = matrices(holdout_ds, n_candidates=C)
+        metrics["n_holdout"] = float(len(yh))
+        metrics["holdout_agreement"] = top1_agreement(policy, Xh, mh, yh)
+    return policy, metrics
+
+
+__all__ = ["TrainConfig", "TRAINABLE_KEYS", "init_params", "forward",
+           "np_scores", "top1_agreement", "train"]

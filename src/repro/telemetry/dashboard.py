@@ -468,6 +468,46 @@ def _reasons_panel(streams: List[Dict[str, Any]]) -> str:
                       "placements, from the schedule event stream")
 
 
+def _policy_panel(bench: Dict[str, Any], slots: Dict[str, int],
+                  order: List[str]) -> str:
+    """Learned-vs-baseline comparison from the latest policy run:
+    density bars per system, QoS violation magnitudes, and the training
+    / serving gate metrics (agreement, QoS excess, stale serves)."""
+    latest = _latest(bench)
+    rows = [r for r in latest.get("rows", []) if r.get("system")]
+    if not rows:
+        return ""
+    for r in rows:
+        slots[r["system"]] = _slot(r["system"], order)
+    systems = [r["system"] for r in rows]
+    density = [(r["system"], float(r.get("density", 0.0)))
+               for r in rows]
+    qos_items = [(r["system"], float(r.get("qos_violation", 0.0)),
+                  f"{float(r.get('qos_violation', 0.0)):.4f}")
+                 for r in rows]
+    met = latest.get("metrics", {})
+    note = (f"trained on {met.get('n_decisions', '?')} traced "
+            f"decisions · imitation holdout agreement "
+            f"{met.get('imitation_agreement', '?')} (gated ≥ 0.90) · "
+            f"QoS excess over k8s {met.get('learned_qos_excess', '?')} "
+            f"· density ratio {met.get('learned_density_ratio', '?')}x "
+            f"k8s · stale-epoch serves {met.get('stale_serves', '?')}")
+    legend = _legend([(s, slots[s]) for s in systems])
+    svg = _grouped_bars([("density", density)], slots)
+    table = _table(
+        ["system", "density", "qos violation", "decisions", "placed",
+         "stale serves"],
+        [[r.get(k, "") for k in (
+            "system", "density", "qos_violation", "decisions",
+            "placed", "stale_serves")] for r in rows])
+    return _card(
+        "Learned policy vs baselines (latest policy run)",
+        legend + svg
+        + "<div class='sub' style='margin:8px 0 2px'>QoS violation "
+          "rate</div>" + _hbars(qos_items) + table,
+        note=note)
+
+
 def _density_over_time_panel(streams: List[Dict[str, Any]],
                              slots: Dict[str, int],
                              order: List[str]) -> str:
@@ -612,6 +652,9 @@ def render(root: Optional[str] = None, events_dir: Optional[str] = None,
                      f"{met.get('wallclock_per_node_slope', '?')} "
                      f"(gated &lt; 1.0) · cells_parity="
                      f"{met.get('cells_parity', '?')}"))
+    pol = benches.get("policy")
+    if pol:
+        cards.append(_policy_panel(pol, slots, order))
     cards.append(_density_over_time_panel(streams, slots, order))
     cards.append(_reasons_panel(streams))
     cards.append(_spans_panel(streams))

@@ -44,7 +44,8 @@ from .report import (bench_path, load_bench, promote_baseline,
                      repo_root)
 
 #: the studies verify.sh --bench gates by default
-DEFAULT_STUDIES = ("large_cluster", "capacity_engine", "scaling")
+DEFAULT_STUDIES = ("large_cluster", "capacity_engine", "scaling",
+                   "policy")
 
 
 @dataclass
@@ -138,6 +139,23 @@ STUDY_RULES: Dict[str, StudyRules] = {
         metric_rules=[Rule("wallclock_per_node_slope", "max_abs",
                            "slope", hard=True),
                       Rule("cells_parity", "eq", None, hard=True)]),
+    "policy": StudyRules(
+        key=("system",),
+        rules=[Rule("density", "min", "density", hard=True),
+               Rule("qos_violation", "max_abs", "qos", hard=True),
+               Rule("stale_serves", "eq", None, hard=True)],
+        # the learned stack's headline: the scorer must keep imitating
+        # the traced jiagu decisions (holdout top-1 agreement), its QoS
+        # may not drift past the no-overcommit K8s baseline by more
+        # than the absolute QoS tolerance, and the consolidation win
+        # over K8s must not erode
+        metric_rules=[Rule("imitation_agreement", "min", "qos",
+                           hard=True),
+                      Rule("learned_qos_excess", "max_abs", "qos",
+                           hard=True),
+                      Rule("learned_density_ratio", "min", "density",
+                           hard=True),
+                      Rule("stale_serves", "eq", None, hard=True)]),
 }
 #: fallback for studies without registered rules: gate the headline
 #: metrics if the rows carry them

@@ -1,0 +1,298 @@
+"""repro.policy: trace dataset round-trip, training determinism, the
+versioned PolicyStore, and the hot-swapped ``"learned"`` stack.
+
+The fixture ``tests/data/policy_traces.jsonl`` is a checked-in
+``JsonlObserver`` stream of a short feature-traced jiagu-pipeline run
+(schema v2: per-candidate feature rows + chosen node + feasibility
+rejections on every schedule record, cumulative QoS counters on every
+tick, a trailing run summary), with two hand-made versionless (v1)
+schedule records spliced in — old artifacts must stay readable."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import CANDIDATE_FEATURES, TRACE_SCHEMA_VERSION
+from repro.core.platform import (Platform, PlatformConfig,
+                                 PlatformConfigError)
+from repro.policy import (LearnedScorer, PolicyStore, PolicyStoreError,
+                          TrainConfig, load_traces, matrices, merge,
+                          normalization, reward_weights, split,
+                          top1_agreement, train_policy)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "policy_traces.jsonl")
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return load_traces(FIXTURE)
+
+
+@pytest.fixture(scope="module")
+def trained(ds):
+    """One tiny deterministic fit shared by the training tests."""
+    train_ds, hold_ds = split(ds)
+    policy, metrics = train_policy(
+        train_ds, hold_ds, TrainConfig(hidden=16, epochs=30, seed=0))
+    return policy, metrics
+
+
+# ---------------------------------------------------------------------------
+# Dataset round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_fixture_records_carry_schema_and_features():
+    schedules, ticks, summaries = [], [], []
+    with open(FIXTURE) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("event") == "schedule":
+                schedules.append(rec["trace"])
+            elif rec.get("event") == "tick":
+                ticks.append(rec)
+            elif rec.get("event") == "summary":
+                summaries.append(rec)
+    v2 = [t for t in schedules if "schema_version" in t]
+    v1 = [t for t in schedules if "schema_version" not in t]
+    assert len(v1) == 2 and len(v2) >= 10
+    captured = [t for t in v2 if "candidates" in t]
+    assert len(captured) >= 10
+    for t in captured:
+        assert t["schema_version"] == TRACE_SCHEMA_VERSION
+        assert t["chosen_node"] >= 0
+        assert "rejected" in t
+        for nid, row in t["candidates"]:
+            assert len(row) == len(CANDIDATE_FEATURES)
+    # the binder's capacity solves reject top-ranked candidates — the
+    # signal the dataset masks out of the label set
+    assert any(t["rejected"] for t in captured)
+    # tick records carry the cumulative QoS counters the horizon
+    # labelling bisects over
+    assert all("requests" in t and "violated" in t for t in ticks)
+    # the trailing run summary closes the stream
+    (summary,) = summaries
+    assert summary["scheduler"] == "jiagu-pipeline"
+    assert summary["ticks"] == len(ticks)
+    assert 0.0 <= summary["qos_violation_rate"] <= 1.0
+    assert summary["density"] > 0
+    assert set(summary["per_fn_violation_rate"]) <= {
+        t.get("fn") for t in schedules}
+
+
+def test_load_traces_roundtrip(ds):
+    assert len(ds) >= 10
+    assert ds.skipped_versionless == 2
+    assert ds.feature_names == CANDIDATE_FEATURES
+    assert ds.summary is not None and ds.summary["event"] == "summary"
+    for d in ds.decisions:
+        assert d.features.shape == (len(d.node_ids), ds.n_features)
+        assert d.features.dtype == np.float32
+        assert 0 <= d.chosen < len(d.node_ids)
+        assert d.requested >= 1
+
+
+def test_split_and_matrices_deterministic(ds):
+    a_train, a_hold = split(ds)
+    b_train, b_hold = split(ds)
+    assert [d.now for d in a_train.decisions] == \
+        [d.now for d in b_train.decisions]
+    assert len(a_train) + len(a_hold) == len(ds)
+    X, mask, y = matrices(ds)
+    assert X.shape == (len(ds), ds.max_candidates, ds.n_features)
+    assert mask.shape == X.shape[:2] and y.shape == (len(ds),)
+    for i, d in enumerate(ds.decisions):
+        assert int(mask[i].sum()) == len(d.node_ids)
+        assert mask[i, y[i]] == 1.0    # the label is a real candidate
+    mu, sd = normalization(X, mask)
+    assert mu.shape == (ds.n_features,) and np.all(sd > 0)
+
+
+def test_merge_accumulates(ds):
+    both = merge([ds, ds])
+    assert len(both) == 2 * len(ds)
+    assert both.skipped_versionless == 2 * ds.skipped_versionless
+    assert both.summary == ds.summary
+
+
+def test_reward_weights_penalize_bad_outcomes(ds):
+    import dataclasses
+    flipped = dataclasses.replace(ds, decisions=[
+        dataclasses.replace(d, qos_breach=(i % 2 == 0),
+                            cold_start=(i % 3 == 0))
+        for i, d in enumerate(ds.decisions)])
+    w = reward_weights(flipped, qos_penalty=3.0, cold_penalty=0.5)
+    assert w.shape == (len(ds),)
+    assert abs(float(w.mean()) - 1.0) < 1e-6
+    clean = [w[i] for i, d in enumerate(flipped.decisions)
+             if not d.qos_breach and not d.cold_start]
+    breached = [w[i] for i, d in enumerate(flipped.decisions)
+                if d.qos_breach]
+    assert breached and clean and max(breached) < min(clean)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+def test_train_is_deterministic(ds, trained):
+    policy_a, metrics_a = trained
+    train_ds, hold_ds = split(ds)
+    policy_b, metrics_b = train_policy(
+        train_ds, hold_ds, TrainConfig(hidden=16, epochs=30, seed=0))
+    for k in policy_a:
+        assert np.array_equal(policy_a[k], policy_b[k]), k
+    assert metrics_a == metrics_b
+    assert 0.0 <= metrics_a["holdout_agreement"] <= 1.0
+    # the fit must at least beat uniform-random candidate picking
+    X, mask, y = matrices(train_ds)
+    chance = float(np.mean(1.0 / mask.sum(axis=1)))
+    assert metrics_a["train_agreement"] > chance
+
+
+def test_offline_rl_mode_reweights(ds):
+    train_ds, _ = split(ds)
+    _, metrics = train_policy(train_ds, None, TrainConfig(
+        hidden=8, epochs=2, mode="offline-rl", qos_penalty=8.0))
+    assert metrics["mode_weight_mean"] == pytest.approx(1.0, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# PolicyStore
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_and_epochs(tmp_path, ds, trained):
+    policy, metrics = trained
+    store = PolicyStore(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        store.load()
+    store.save(policy, epoch=0, mode="imitation",
+               feature_names=ds.feature_names, metrics=metrics)
+    store.save(policy, epoch=3, mode="offline-rl")
+    assert store.epochs() == [0, 3] and store.latest_epoch() == 3
+    loaded, meta = store.load()                    # latest wins
+    assert meta["epoch"] == 3 and meta["mode"] == "offline-rl"
+    pinned, meta0 = store.load(epoch=0)
+    assert meta0["mode"] == "imitation"
+    assert tuple(meta0["feature_names"]) == ds.feature_names
+    assert meta0["metrics"]["holdout_agreement"] == \
+        metrics["holdout_agreement"]
+    for k, v in policy.items():
+        assert np.array_equal(pinned[k], v), k
+    with pytest.raises(FileNotFoundError):
+        store.load(epoch=7)
+    # truncated npz (no __meta__) is a store error, not a crash
+    np.savez(tmp_path / "policy_e000005.npz", w1=policy["w1"])
+    with pytest.raises(PolicyStoreError):
+        store.load(epoch=5)
+
+
+# ---------------------------------------------------------------------------
+# The "learned" stack
+# ---------------------------------------------------------------------------
+
+SMOKE_MANIFEST = {
+    "scenario": {"kind": "burst-storm", "n_functions": 4,
+                 "duration_s": 20, "target_nodes": 8, "seed": 0},
+    "scheduler": {"name": "learned"},
+    "prediction": {"n_train": 300, "n_trees": 8},
+}
+
+
+def test_learned_stack_builds_from_config_dict():
+    """The acceptance bar: ``"learned"`` runs straight from a pure
+    PlatformConfig dict, no trained artifact on disk (heuristic
+    fallback), and serves with zero stale-epoch decisions."""
+    plat = Platform.build(config=dict(SMOKE_MANIFEST))
+    res = plat.run()
+    scorer = plat.scheduler.learned_scorer
+    assert res.ticks == 20
+    assert scorer.stats.batches > 0 and scorer.stats.scored_nodes > 0
+    assert scorer.stats.stale_serves == 0
+    assert scorer.policy is None          # heuristic mode: no weights
+
+
+def test_learned_stack_serves_stored_policy(tmp_path, ds, trained):
+    policy, _ = trained
+    store = PolicyStore(str(tmp_path))
+    store.save(policy, epoch=0, mode="imitation",
+               feature_names=ds.feature_names)
+    manifest = dict(SMOKE_MANIFEST,
+                    policy={"store": str(tmp_path), "epoch": 0})
+    plat = Platform.build(config=manifest)
+    scorer = plat.scheduler.learned_scorer
+    assert scorer.policy is not None and scorer.stats.swaps == 1
+    res = plat.run()
+    assert res.ticks == 20 and scorer.stats.batches > 0
+    assert scorer.stats.stale_serves == 0
+
+
+def test_hot_swap_keeps_stale_serves_zero(tmp_path, ds, trained):
+    """A live PredictionService retrain bumps the serving epoch; the
+    platform's listener re-tags the scorer inside the same synchronous
+    callback, so post-retrain scoring never runs at a lagging epoch."""
+    from repro.core.pipeline import DecisionContext
+
+    policy, _ = trained
+    PolicyStore(str(tmp_path)).save(policy, epoch=0, mode="imitation")
+    plat = Platform.build(config=dict(
+        SMOKE_MANIFEST, policy={"store": str(tmp_path)}))
+    plat.run()
+    sched = plat.scheduler
+    scorer, svc = sched.learned_scorer, sched.prediction_service
+    swaps0, epoch0 = scorer.stats.swaps, svc.epoch
+
+    svc.retrain()                         # live epoch bump
+    assert svc.epoch == epoch0 + 1
+    assert scorer.stats.swaps == swaps0 + 1
+    assert scorer.expected_epoch == svc.epoch == scorer.epoch
+
+    fn = next(iter(plat.cluster.specs))
+    ctx = DecisionContext(sched, fn, 1, 21.0, None)
+    nodes = list(plat.cluster.nodes.values())[:4]
+    scores = scorer.score_batch(ctx, nodes)
+    assert len(scores) == len(nodes)
+    assert scorer.stats.stale_serves == 0
+
+    # a missed swap IS counted: mismatched expectation -> stale serve
+    scorer.expect(scorer.epoch + 1)
+    scorer.score_batch(ctx, nodes)
+    assert scorer.stats.stale_serves == 1
+
+
+def test_scorer_agrees_with_np_forward(ds, trained):
+    """The jitted serving path and the numpy evaluation path score
+    identically (padding rows don't leak into real scores)."""
+    from repro.policy import np_scores
+
+    policy, _ = trained
+    scorer = LearnedScorer(policy, epoch=0)
+    X, mask, y = matrices(ds)
+    agree = top1_agreement(policy, X, mask, y)
+    assert 0.0 <= agree <= 1.0
+    d = ds.decisions[0]
+    want = np_scores(policy, d.features)
+    rows = d.features
+    pad = 8 if len(rows) <= 8 else len(rows)
+    got = np.asarray(scorer._fwd(np.concatenate(
+        [rows, np.zeros((pad - len(rows), rows.shape[1]), np.float32)])
+        if pad != len(rows) else rows))[:len(rows)]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_policy_config_validation():
+    with pytest.raises(PlatformConfigError):
+        PlatformConfig.from_dict(dict(
+            SMOKE_MANIFEST, policy={"epoch": 3})).validate()
+    with pytest.raises(PlatformConfigError):
+        PlatformConfig.from_dict(dict(
+            SMOKE_MANIFEST,
+            pipeline={"decision_traces": False,
+                      "trace_features": True})).validate()
+    with pytest.raises(PlatformConfigError):
+        PlatformConfig.from_dict(dict(
+            SMOKE_MANIFEST, policy={"stor": "x"}))
