@@ -1,0 +1,200 @@
+"""Admission study: vertical scaling + queue-backed admission vs the
+horizontal-only control plane, on the 256-node burst-storm scenario.
+
+Two arms share scenario, world seed, harvesting scheduler and the SLO
+class population (half the functions tagged best-effort); only the
+admission axis differs:
+
+  * ``vertical-queue`` — KEDA-style queue-backed scaling signal
+    (best-effort arrivals clamp to current service rate plus geometric
+    backlog catch-up; latency-critical insta-scales) and the vertical
+    resizer harvesting idle cpu reservations through the
+    PredictionService capacity tables.
+  * ``horizontal-only`` — the same queues meter and account traffic
+    (identical per-class QoS bookkeeping) but the autoscaler sees the
+    legacy instantaneous rps signal and no instance is ever resized.
+
+Headline metrics, gated in-run and against ``BENCH_admission.json`` by
+the telemetry regression gate:
+
+  * ``density_win`` — seed-mean density delta (vertical-queue minus
+    horizontal-only) must stay **> 0**: vertical harvest + paced
+    scale-out packs denser than storm-chasing horizontal scaling.
+  * ``lc_excess`` — the latency-critical violation-rate delta may not
+    exceed ``LC_EXCESS_MAX``: the density win cannot be bought by
+    queueing the latency-critical class past its budget.
+  * ``conservation`` — per-queue request conservation (arrived ==
+    released + dropped + pending) at float-eps, every arm, every seed.
+
+  PYTHONPATH=src python -m benchmarks.admission [--quick | --smoke]
+
+``--smoke`` (the ``scripts/verify.sh --admission`` arm) runs one seed
+on a 24-node fleet in seconds: the A/B deltas are noise at that scale,
+so only the conservation and accounting gates apply.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import emit, save_artifact
+
+from repro.platform import Platform
+from repro.telemetry import RunReport, append_bench
+
+KIND = "burst-storm"
+N_FUNCTIONS = 24
+#: seed-mean latency-critical violation-rate excess allowed for the
+#: vertical-queue arm (per-seed deltas are +/-0.005 noise; the mean
+#: must stay within this of the horizontal-only baseline)
+LC_EXCESS_MAX = 0.0075
+#: per-queue conservation residual (absolute requests)
+CONSERVATION_MAX = 1e-6
+
+#: the two admission arms (PlatformConfig ``admission:`` sections)
+ARMS = {
+    "vertical-queue": {"enabled": True, "vertical": True,
+                       "signal": "queue", "target_drain_s": 1.0},
+    "horizontal-only": {"enabled": True, "signal": "rps"},
+}
+
+
+def study_spec(quick: bool = False, seed: int = 0,
+               smoke: bool = False) -> dict:
+    if smoke:
+        nodes, duration, seeds = 24, 120, [seed]
+    elif quick:
+        nodes, duration, seeds = 128, 300, [seed, seed + 1, seed + 2]
+    else:
+        nodes, duration, seeds = 256, 420, [seed, seed + 1, seed + 2]
+    return {
+        "seeds": seeds,
+        "base": {
+            "scenario": {"kind": KIND, "n_functions": N_FUNCTIONS,
+                         "duration_s": duration, "target_nodes": nodes,
+                         "utilization": 1.1, "seed": seed,
+                         "trace_kw": {"storms_per_hour": 30.0,
+                                      "coherence": 0.8}},
+            "scheduler": {"name": "harvesting"},
+        },
+        "arms": ARMS,
+    }
+
+
+def run_arm(spec: dict, arm: str, seed: int) -> dict:
+    """One (arm, seed) run; returns the benchmark row."""
+    import copy
+    manifest = copy.deepcopy(spec["base"])
+    manifest["scenario"]["seed"] = seed
+    manifest["admission"] = dict(spec["arms"][arm])
+    t0 = time.perf_counter()
+    plat = Platform.build(config=manifest)
+    res = plat.run()
+    adm = plat.simulation.admission
+    cls = res.class_violation_rate()
+    row = {
+        "system": arm,
+        "seed": seed,
+        "density": round(res.density, 3),
+        "qos_violation": round(res.qos_violation_rate, 4),
+        "lc_violation": round(cls.get("latency-critical", 0.0), 4),
+        "be_violation": round(cls.get("best-effort", 0.0), 4),
+        "queue_delay_p99": round(res.queue_delay_s.p99, 3),
+        "queue_depth_peak": round(res.queue_depth_peak, 1),
+        "dropped": round(res.dropped_requests, 1),
+        "vertical_grows": res.vertical_grows,
+        "vertical_shrinks": res.vertical_shrinks,
+        "conservation": adm.conservation_error(),
+        "requests": round(res.requests, 1),
+        "nodes_peak": res.nodes_peak,
+        "wall_s": round(time.perf_counter() - t0, 1),
+    }
+    print(f"# {arm} seed={seed}: density={row['density']} "
+          f"qos={row['qos_violation']} lc={row['lc_violation']} "
+          f"qd_p99={row['queue_delay_p99']}s "
+          f"v={row['vertical_grows']}+{row['vertical_shrinks']} "
+          f"({row['wall_s']}s)", flush=True)
+    return row
+
+
+def run(quick: bool = False, seed: int = 0, bench: bool = False,
+        smoke: bool = False):
+    """Both arms over the seed sweep; gate the vertical-queue arm's
+    density win and latency-critical safety against horizontal-only.
+    ``bench=True`` persists a ``RunReport`` into
+    ``BENCH_admission.json`` for the regression gate."""
+    spec = study_spec(quick=quick, seed=seed, smoke=smoke)
+    rows = [run_arm(spec, arm, s)
+            for s in spec["seeds"] for arm in spec["arms"]]
+    emit(rows)
+
+    def mean(arm, key):
+        vals = [r[key] for r in rows if r["system"] == arm]
+        return sum(vals) / len(vals)
+
+    conservation = max(r["conservation"] for r in rows)
+    density_win = round(mean("vertical-queue", "density")
+                        - mean("horizontal-only", "density"), 4)
+    lc_excess = round(mean("vertical-queue", "lc_violation")
+                      - mean("horizontal-only", "lc_violation"), 4)
+    metrics = {
+        "density_win": density_win,
+        "lc_excess": lc_excess,
+        "queue_delay_p99": round(mean("vertical-queue",
+                                      "queue_delay_p99"), 3),
+        "dropped_total": round(sum(r["dropped"] for r in rows), 1),
+        "conservation": conservation,
+        "vertical_shrinks": sum(r["vertical_shrinks"] for r in rows
+                                if r["system"] == "vertical-queue"),
+    }
+    # explicit raises, not asserts: the gates must fire under -O too
+    if conservation > CONSERVATION_MAX:
+        raise RuntimeError(
+            f"admission: queue conservation residual {conservation} "
+            f"> {CONSERVATION_MAX} — requests were lost or invented")
+    if not smoke:
+        # A/B deltas on one 24-node smoke seed are pure noise; the
+        # win is only meaningful over the full seed sweep
+        if density_win <= 0.0:
+            raise RuntimeError(
+                f"admission: vertical-queue density win {density_win} "
+                f"<= 0 — vertical harvest + queue-paced scaling lost "
+                f"the packing advantage")
+        if lc_excess > LC_EXCESS_MAX:
+            raise RuntimeError(
+                f"admission: latency-critical violation excess "
+                f"{lc_excess} > {LC_EXCESS_MAX} — the density win is "
+                f"being bought with latency-critical queueing")
+    print(f"# admission gates: conservation={conservation:.2e} "
+          f"(<= {CONSERVATION_MAX})"
+          + ("" if smoke else
+             f" density_win={density_win} (> 0) "
+             f"lc_excess={lc_excess} (<= {LC_EXCESS_MAX})")
+          + " => PASS", flush=True)
+
+    record = {"kind": KIND, "spec": spec, "rows": rows,
+              "metrics": metrics}
+    save_artifact("admission", record)
+    if bench:
+        report = RunReport.build(
+            "admission", mode="quick" if quick else "full",
+            manifest={"kind": KIND, "base": spec["base"],
+                      "arms": spec["arms"], "seeds": spec["seeds"]},
+            metrics=metrics, rows=rows)
+        path = append_bench(report)
+        print(f"# bench: appended {report.mode} run "
+              f"({len(rows)} rows, git {report.git_sha}) -> {path}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="128 nodes / 300s (full: 256 nodes / 420s)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one 24-node seed, conservation gates only "
+                         "(scripts/verify.sh --admission)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke, seed=args.seed,
+        bench=not args.smoke)

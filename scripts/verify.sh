@@ -39,6 +39,12 @@
 #                                zero stale-epoch serves, seconds-scale
 #                                phases, no trajectory write
 #                                (python -m benchmarks.policy --smoke)
+#   scripts/verify.sh --admission  admission smoke: vertical-queue vs
+#                                horizontal-only arms on one 24-node
+#                                burst-storm seed, queue-conservation
+#                                and per-class accounting gates, no
+#                                trajectory write
+#                                (python -m benchmarks.admission --smoke)
 # The platform smoke step builds every registered scheduler — the four
 # legacy ones, their pipeline-stack re-expressions, and the harvesting
 # scheduler — against one scenario from pure PlatformConfig manifest
@@ -56,6 +62,7 @@ run_bench_gate() {
     python -m benchmarks.capacity_engine --quick
     python -m benchmarks.scaling --quick
     python -m benchmarks.policy --quick
+    python -m benchmarks.admission --quick
     # ...the gate diffs the fresh runs against the checked-in baselines
     # (hard-fails on density/QoS regressions; generous slack on the
     # wall-clock latency percentiles)...
@@ -77,6 +84,11 @@ fi
 if [ "${1:-}" = "--policy" ]; then
     shift
     python -m benchmarks.policy --smoke
+    exit 0
+fi
+if [ "${1:-}" = "--admission" ]; then
+    shift
+    python -m benchmarks.admission --smoke
     exit 0
 fi
 if [ "${1:-}" = "--full" ]; then

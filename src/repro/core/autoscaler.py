@@ -164,6 +164,12 @@ class Autoscaler:
         self.capacity = capacity or SchedulerCapacityProvider(scheduler)
         self.events = events or EventHub()
         self.metrics = ScalingMetrics()
+        #: AdmissionController (repro.admission) — wired by
+        #: ``build_simulation`` when the admission axis is enabled.
+        #: Drives the end-of-tick vertical resize pass and stamps
+        #: queue/SLO context onto DecisionTraces; None (default) keeps
+        #: every pre-admission code path untouched.
+        self.admission = None
         self._below_since: Dict[str, Optional[float]] = {}
         self._ledger = _CachedLedger()
         #: event-core hook — called with fn when an out-of-band mutation
@@ -214,6 +220,11 @@ class Autoscaler:
             self._tick_fn(now, fn, rps.get(fn, 0.0))
         if self.cfg.dual_staged and self.cfg.migrate:
             self._migrate(now)
+        if self.admission is not None:
+            # vertical resize rides the horizontal pass: shrink/grow
+            # cpu reservations, re-solved against the capacity table
+            self.admission.vertical_tick(now, self.cluster,
+                                         self.scheduler, self.events)
         self.cluster.reap_empty()
 
     def next_wake(self, fn: str) -> Optional[float]:
@@ -263,8 +274,11 @@ class Autoscaler:
                     [p.latency_ms + self.cfg.init_ms] * p.count)
             # pipeline schedulers attach a DecisionTrace explaining the
             # placement; legacy monolithic schedulers yield None
-            self.events.on_schedule(now, fn, placements,
-                                    self.scheduler.take_trace())
+            trace = self.scheduler.take_trace()
+            if trace is not None and self.admission is not None:
+                # schema-v3 admission context: queue depth/age + class
+                self.admission.stamp_trace(trace, fn, now)
+            self.events.on_schedule(now, fn, placements, trace)
             if placed:
                 self.events.on_scale(now, fn, "real_cold_start", placed)
 

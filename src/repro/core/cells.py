@@ -336,8 +336,20 @@ class CellSimulation:
                 res.stale_epoch_hits += int(
                     st["stale_epoch_hits"]
                     - s0.get("stale_epoch_hits", 0))
+        for cell in self.cells:
+            adm = cell.autoscaler.admission
+            if adm is not None:
+                adm.finalize(res)
         self.events.on_result(res)
         return res
+
+    def queue_depth_total(self) -> Optional[float]:
+        """Fleet-wide pending-queue depth, or None when admission is off
+        (mirrors ``Simulation.queue_depth_total``)."""
+        depths = [cell.autoscaler.admission.queue_depth()
+                  for cell in self.cells
+                  if cell.autoscaler.admission is not None]
+        return sum(depths) if depths else None
 
     # ------------------------------------------------------------------
 
@@ -354,6 +366,14 @@ class CellSimulation:
         armed timer, no ledger entries due."""
         self.cell_ticks += 1
         active = {fn for fn, v in cell_rps.items() if v > 1e-9}
+        adm = cell.autoscaler.admission
+        if adm is not None:
+            # admission phase 1 (per-cell queues): arrivals enter the
+            # cell's bounded queues; the autoscaler sees the backlog-
+            # derived signal, and functions with pending backlog stay
+            # due even when their instantaneous share dropped to zero
+            cell_rps = adm.enqueue(now, cell_rps, cell.cluster)
+            active = active | adm.pending_fns()
         due = active | (cell.prev_active - active)
         due |= cell.pop_due_wakes(now)
         if cell.dirty:
@@ -376,6 +396,11 @@ class CellSimulation:
 
     def _measure_cell(self, cell: Cell, now: float,
                       cell_rps: Dict[str, float], res: SimResult) -> None:
+        adm = cell.autoscaler.admission
+        if adm is not None:
+            # admission phase 2: the cell's backlog drains into its
+            # just-scaled slice; measurement routes served traffic
+            cell_rps = adm.drain(now, cell.cluster, res)
         if not cell.prev_active and not cell.scheduler.needs_idle_observe:
             return      # no live traffic: nothing measurable, no-op observes
         sat_totals = {fn: cell.cluster.sat_count(fn)
@@ -384,7 +409,8 @@ class CellSimulation:
             else {fn: cell.cluster.sat_count(fn) for fn in self.specs}
         measure_cluster(now, cell.cluster, self.specs, cell_rps,
                         sat_totals, cell.router, cell.scheduler,
-                        self.gt, self.qos, res)
+                        self.gt, self.qos, res,
+                        slo=None if adm is None else adm.slo)
 
     def _collect_sample(self) -> None:
         """Mirror of ``Simulation._collect_sample`` over the fleet:

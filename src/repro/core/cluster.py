@@ -50,6 +50,12 @@ class Node:
         self.res = res
         self.funcs: Dict[str, FuncState] = {}
         self.table: Dict[str, CapEntry] = {}
+        #: per-function cpu-reservation share in (0, 1] set by the
+        #: vertical resizer (``repro.admission``); absent == 1.0 (full
+        #: request).  Only ``cpu_requested`` reads it, and entries are
+        #: dropped with the function's last instance, so an empty dict
+        #: keeps the pre-admission cluster bit-identical.
+        self.shares: Dict[str, float] = {}
         self.update_pending_until: float = -1.0
         #: owning Cluster, set by ``Cluster.add_node`` — standalone nodes
         #: (benchmark fixtures, capacity-table unit tests) stay None and
@@ -73,7 +79,11 @@ class Node:
         return sum(specs[n].mem_req * s.total for n, s in self.funcs.items())
 
     def cpu_requested(self, specs: Dict[str, FunctionSpec]) -> float:
-        return sum(specs[n].cpu_req * s.total for n, s in self.funcs.items())
+        if not self.shares:
+            return sum(specs[n].cpu_req * s.total
+                       for n, s in self.funcs.items())
+        return sum(specs[n].cpu_req * self.shares.get(n, 1.0) * s.total
+                   for n, s in self.funcs.items())
 
     def is_empty(self) -> bool:
         return self.n_instances() == 0
@@ -123,6 +133,7 @@ class Node:
         if s.total == 0:
             self.funcs.pop(fn, None)
             self.table.pop(fn, None)
+            self.shares.pop(fn, None)
         self._notify(fn, 0, -k)
         return k
 
@@ -133,6 +144,7 @@ class Node:
         if s.total == 0:
             self.funcs.pop(fn, None)
             self.table.pop(fn, None)
+            self.shares.pop(fn, None)
         self._notify(fn, -k, 0)
         return k
 

@@ -204,6 +204,12 @@ class JsonlObserver(Observer):
         if live is not None:
             rec["requests"] = round(live.requests, 3)
             rec["violated"] = round(live.violated_requests, 3)
+        # pending-request backlog (repro.admission); absent — not 0 —
+        # when the admission axis is off, so off-axis streams are
+        # byte-identical to the pre-admission format
+        depth = sim.queue_depth_total()
+        if depth is not None:
+            rec["queue_depth"] = round(depth, 3)
         self._write(rec)
 
     def on_schedule(self, now: float, fn: str, placements,
@@ -241,6 +247,15 @@ class JsonlObserver(Observer):
                 fn: round(r, 6)
                 for fn, r in sorted(result.per_fn_violation_rate().items())
             },
+            # per-SLO-class accounting (repro.admission); keys absent
+            # when the admission axis is off
+            **({"class_violation_rate": {
+                    c: round(r, 6) for c, r
+                    in sorted(result.class_violation_rate().items())},
+                "dropped_requests": round(result.dropped_requests, 3),
+                "queue_delay_p99_s": round(result.queue_delay_s.p99, 4),
+                "queue_depth_peak": round(result.queue_depth_peak, 3)}
+               if result.class_requests else {}),
         })
 
     def on_span(self, span) -> None:

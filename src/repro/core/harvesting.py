@@ -109,7 +109,7 @@ class HarvestBinder:
         cap, ms = sched._slow_capacity(node, ctx.fn, ctx.remaining)
         ctx.add_ms(ms)
         st = node.state(ctx.fn)
-        bound = int(cap * sched.harvest_headroom)
+        bound = int(cap * sched.harvest_bound(ctx.fn))
         room = min(bound - st.n_sat - st.n_cached, ctx.mem_room(node))
         if room <= 0:
             ctx.reject(node, "no-idle-headroom")
@@ -146,7 +146,7 @@ class HarvestScaleOutBinder:
         cap, ms = sched._slow_capacity(node, ctx.fn, ctx.remaining)
         ctx.add_ms(ms)
         ctx.metrics.slow += 1
-        bound = max(int(cap * sched.harvest_headroom), 1)
+        bound = max(int(cap * sched.harvest_bound(ctx.fn)), 1)
         room = min(bound, ctx.mem_room(node))
         if room <= 0:
             ctx.reject(node, "scale-out-infeasible")
@@ -173,6 +173,13 @@ class HarvestingScheduler(PipelineHostMixin, JiaguScheduler):
         super().__init__(cluster, store, qos, predictor, m_max=m_max,
                          engine=engine)
         self.harvest_headroom = harvest_headroom
+        #: per-function harvest bounds, maintained by the vertical
+        #: resizer (``repro.admission``): a best-effort function running
+        #: at a shrunken cpu share frees real headroom, so its bound may
+        #: exceed the global scalar (up to the capacity-table solve).
+        #: Empty == every function uses ``harvest_headroom``, which is
+        #: the admission-off parity configuration.
+        self.harvest_bounds: Dict[str, float] = {}
         self.cooldown_s = qos_release_cooldown_s
         self.release_stage = BreachAwareReleasePicker(self)
         self.logical_start_stage = CooldownLogicalStartPicker(self)
@@ -188,6 +195,11 @@ class HarvestingScheduler(PipelineHostMixin, JiaguScheduler):
         self._released: Deque[List] = deque()
         self.qos_released = 0        # instances released on breach
         self.qos_breaches = 0        # distinct breach events handled
+
+    def harvest_bound(self, fn: str) -> float:
+        """Harvest headroom for ``fn``: its vertical-resize bound when
+        one exists, the global scalar otherwise."""
+        return self.harvest_bounds.get(fn, self.harvest_headroom)
 
     # -- the stack --------------------------------------------------------
 

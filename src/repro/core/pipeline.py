@@ -62,9 +62,12 @@ TRACE_TOP_SCORES = 4
 #: DecisionTrace serialization schema.  v1 records (no
 #: ``schema_version`` key) carried score terms only; v2 adds the
 #: per-candidate raw feature vectors + chosen node that make JSONL
-#: streams a reusable offline training dataset (``repro.policy``).
-#: Readers must keep accepting versionless (v1) records.
-TRACE_SCHEMA_VERSION = 2
+#: streams a reusable offline training dataset (``repro.policy``); v3
+#: adds the admission context (pending-queue depth/age, SLO class) the
+#: ``repro.admission`` controller stamps on every scale-up decision.
+#: Readers must keep accepting versionless (v1) and v2 records — the
+#: v3 fields default to zero/None, so old streams load unchanged.
+TRACE_SCHEMA_VERSION = 3
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +131,13 @@ class DecisionTrace:
     #: node that received this decision's first binding (-1 when the
     #: decision failed outright) — the imitation-learning label
     chosen_node: int = -1
+    #: admission context at decision time (schema v3) — pending-queue
+    #: depth and oldest-request age for ``fn``, and its SLO class.
+    #: Stamped by ``AdmissionController.stamp_trace``; zero/None when
+    #: admission is off, so v2 consumers see only inert defaults.
+    queue_depth: float = 0.0
+    queue_age_s: float = 0.0
+    slo_class: Optional[str] = None
     #: every node id any stage rejected during the decision (filters
     #: AND binder refusals — capacity solves, mem room).  Only
     #: populated under ``trace_features``: offline training masks these
@@ -158,6 +168,10 @@ class DecisionTrace:
                          for b in self.bindings],
             "filtered": dict(self.filtered),
         }
+        if self.slo_class is not None:
+            out["queue_depth"] = round(self.queue_depth, 4)
+            out["queue_age_s"] = round(self.queue_age_s, 4)
+            out["slo_class"] = self.slo_class
         if self.candidates:
             out["candidates"] = [
                 [nid, [round(float(v), 5) for v in row]]

@@ -71,6 +71,7 @@ from .harvesting import CooldownLogicalStartPicker, HarvestingScheduler
 # importing the policy stage registers the "learned" scheduler stack
 # (JAX stays un-imported until real weights swap in)
 from ..policy.stage import LearnedScheduler, LearnedScorer
+from ..admission import ADMIT_STAGES, RELEASE_STAGES
 from ..telemetry import Telemetry, publish_result
 
 
@@ -201,6 +202,15 @@ register_stage("logical-start", "table-bound",
 register_stage("logical-start", "cooldown-table-bound",
                CooldownLogicalStartPicker)
 register_stage("scorer", "learned", lambda sched: LearnedScorer())
+
+# admission-pipeline stages (``repro.admission``): the controller owns
+# the authoritative name -> class dicts; re-registering them here makes
+# them discoverable/validatable through the same registry as picker
+# stages (``registered_stages("admit")`` etc.)
+for _name, _cls in ADMIT_STAGES.items():
+    register_stage("admit", _name, _cls)
+for _name, _cls in RELEASE_STAGES.items():
+    register_stage("queue-release", _name, _cls)
 
 
 # ---------------------------------------------------------------------------
@@ -388,6 +398,45 @@ class CellsSection:
     exchange: bool = True
 
 
+@dataclass
+class AdmissionSection:
+    """Queue-backed admission, SLO classes and vertical scaling
+    (``repro.admission``).  Default-off: ``enabled=False`` builds the
+    exact pre-admission control plane (no controller object exists),
+    which the admission-off bit-parity gates pin down.  Field names
+    mirror ``admission.AdmissionConfig`` one-to-one."""
+
+    enabled: bool = False
+    #: per-function cpu-reservation resize driving the harvesting
+    #: scheduler's per-function harvest bounds
+    vertical: bool = False
+    #: autoscaler input: "queue" = backlog-derived (depth + drain
+    #: target, KEDA-style), "rps" = instantaneous arrivals (the
+    #: horizontal-only benchmark arm)
+    signal: str = "queue"
+    #: fraction of the population tagged best-effort (deterministic
+    #: hash tag, no RNG stream consumed)
+    best_effort_frac: float = 0.5
+    slo_seed: int = 0
+    #: queue bound, in seconds of peak-held arrival rate
+    queue_cap_s: float = 8.0
+    #: backlog catch-up horizon the "queue" signal targets
+    target_drain_s: float = 2.0
+    #: per-class queue-delay budgets (delay beyond = violation)
+    lc_delay_budget_s: float = 0.25
+    be_delay_budget_s: float = 8.0
+    #: backlog catch-up provisioning cap, in multiples of the
+    #: peak-held arrival rate
+    catch_up_mult: float = 1.5
+    #: admit/release stage names (``registered_stages("admit")`` /
+    #: ``registered_stages("queue-release")``)
+    admit: str = "bounded-fifo"
+    queue_release: str = "greedy"
+    #: vertical-resize floor for a best-effort function's cpu share
+    min_share: float = 0.5
+    resize_every_s: float = 15.0
+
+
 _SECTIONS = {
     "cluster": ClusterSection,
     "scenario": ScenarioSection,
@@ -399,6 +448,7 @@ _SECTIONS = {
     "simulation": SimulationSection,
     "telemetry": TelemetrySection,
     "cells": CellsSection,
+    "admission": AdmissionSection,
 }
 
 
@@ -445,6 +495,7 @@ class PlatformConfig:
     simulation: SimulationSection = field(default_factory=SimulationSection)
     telemetry: TelemetrySection = field(default_factory=TelemetrySection)
     cells: CellsSection = field(default_factory=CellsSection)
+    admission: AdmissionSection = field(default_factory=AdmissionSection)
 
     # -- (de)serialization ------------------------------------------------
 
@@ -551,6 +602,31 @@ class PlatformConfig:
             raise PlatformConfigError(
                 f"cells.load_cap must be in (0, 1], got "
                 f"{self.cells.load_cap}")
+        adm = self.admission
+        if adm.vertical and not adm.enabled:
+            raise PlatformConfigError(
+                "admission.vertical needs the admission controller; "
+                "set admission.enabled=True")
+        if adm.signal not in ("queue", "rps"):
+            raise PlatformConfigError(
+                f"admission.signal must be 'queue' or 'rps', got "
+                f"{adm.signal!r}")
+        if not 0 <= adm.best_effort_frac <= 1:
+            raise PlatformConfigError(
+                f"admission.best_effort_frac must be in [0, 1], got "
+                f"{adm.best_effort_frac}")
+        if adm.queue_cap_s <= 0 or adm.target_drain_s <= 0 \
+                or adm.lc_delay_budget_s <= 0 \
+                or adm.be_delay_budget_s <= 0 or adm.resize_every_s <= 0:
+            raise PlatformConfigError(
+                "admission: queue_cap_s, target_drain_s, the delay "
+                "budgets and resize_every_s must all be positive")
+        if not 0 < adm.min_share <= 1:
+            raise PlatformConfigError(
+                f"admission.min_share must be in (0, 1], got "
+                f"{adm.min_share}")
+        get_stage("admit", adm.admit)                  # unknown -> raises
+        get_stage("queue-release", adm.queue_release)  # unknown -> raises
         return self
 
 
@@ -703,7 +779,8 @@ class Platform:
             dual_staged=cfg.scaling.dual_staged,
             learned_shape_margin=p.learned_shape_margin,
             harvest_headroom=cfg.scheduler.harvest_headroom,
-            qos_release_cooldown_s=cfg.scheduler.qos_release_cooldown_s)
+            qos_release_cooldown_s=cfg.scheduler.qos_release_cooldown_s,
+            admission=cfg.admission if cfg.admission.enabled else None)
         if cfg.cells.count > 1:
             if router is not None:
                 raise PlatformConfigError(
@@ -874,7 +951,7 @@ __all__ = [
     "ClusterSection", "ScenarioSection", "SchedulerSection",
     "ScalingSection", "PredictionSection", "PipelineSection",
     "PolicySection", "SimulationSection", "TelemetrySection",
-    "NodeClassConfig", "CellsSection",
+    "NodeClassConfig", "CellsSection", "AdmissionSection",
     # sharded control plane
     "Cell", "CellRouter", "CellSimulation", "CapacityExchange",
     "cell_scenario_simulation",

@@ -26,6 +26,7 @@ which is the safe direction for QoS.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -377,6 +378,7 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
                      learned_shape_margin: bool = False,
                      harvest_headroom: float = 0.85,
                      qos_release_cooldown_s: float = 30.0,
+                     admission=None,
                      events: Optional[EventHub] = None) -> Simulation:
     """The one scheduler-dispatch/autoscaler/SimConfig assembly, shared
     by ``scenario_simulation``, ``platform.Platform.build`` and
@@ -396,6 +398,10 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
     forces it for any scheduler — the greedy picker defaults make the
     release / logical-cold-start machinery meaningful for all of them.
     ``router``/``events`` plug the routing policy and observer hub.
+    ``admission`` takes an ``AdmissionConfig`` (or any object with its
+    fields, e.g. the platform's ``AdmissionSection``) and attaches an
+    ``AdmissionController`` to the simulation and autoscaler; ``None``
+    — the default — builds the exact pre-admission control plane.
     """
     entry = scheduler_entry(scheduler)
     sched = build_scheduler(scheduler, SchedulerBuildContext(
@@ -423,9 +429,24 @@ def build_simulation(specs: Dict[str, FunctionSpec], trace: Trace,
         cfg.sample_every_s = sample_every_s
     if use_engine is not None:
         cfg.use_capacity_engine = use_engine
-    return Simulation(specs, trace, sched, aut, gt, store, qos,
-                      predictor=predictor, cfg=cfg, router=router,
-                      events=events)
+    sim = Simulation(specs, trace, sched, aut, gt, store, qos,
+                     predictor=predictor, cfg=cfg, router=router,
+                     events=events)
+    if admission is not None:
+        # late import: core stays importable without the admission
+        # package on the path, and admission-off builds never touch it
+        from ..admission import AdmissionConfig, AdmissionController
+        adm_cfg = admission if isinstance(admission, AdmissionConfig) \
+            else AdmissionConfig(**{
+                f.name: getattr(admission, f.name)
+                for f in dataclasses.fields(AdmissionConfig)
+                if hasattr(admission, f.name)})
+        ctl = AdmissionController(specs, adm_cfg, store=store)
+        sim.admission = ctl
+        # the autoscaler drives the end-of-tick vertical pass and
+        # stamps decision traces with queue context (schema v3)
+        aut.admission = ctl
+    return sim
 
 
 def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
@@ -448,6 +469,7 @@ def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
                         learned_shape_margin: bool = False,
                         harvest_headroom: float = 0.85,
                         qos_release_cooldown_s: float = 30.0,
+                        admission=None,
                         events: Optional[EventHub] = None) -> Simulation:
     """Assemble a full Simulation for `scenario` (world built on demand,
     heterogeneous elastic cluster from the scenario's node classes).
@@ -476,4 +498,5 @@ def scenario_simulation(scenario: Scenario, scheduler: str = "jiagu", *,
         max_candidates=max_candidates, sim_seed=sim_seed,
         router=router, learned_shape_margin=learned_shape_margin,
         harvest_headroom=harvest_headroom,
-        qos_release_cooldown_s=qos_release_cooldown_s, events=events)
+        qos_release_cooldown_s=qos_release_cooldown_s,
+        admission=admission, events=events)

@@ -185,10 +185,25 @@ class SimResult:
     refresh_rows: int = 0
     refresh_time_s: float = 0.0
     stale_epoch_hits: int = 0
+    # admission accounting (repro.admission; all-zero/empty when the
+    # admission axis is off — the default)
+    class_requests: Dict[str, float] = field(default_factory=dict)
+    class_violations: Dict[str, float] = field(default_factory=dict)
+    dropped_requests: float = 0.0
+    queue_delay_s: Reservoir = field(default_factory=lambda: Reservoir(512))
+    queue_depth_peak: float = 0.0
+    vertical_grows: int = 0
+    vertical_shrinks: int = 0
 
     @property
     def qos_violation_rate(self) -> float:
         return self.violated_requests / max(self.requests, 1e-9)
+
+    def class_violation_rate(self) -> Dict[str, float]:
+        """Per-SLO-class QoS violation rate (empty without admission)."""
+        return {c: self.class_violations.get(c, 0.0)
+                / max(self.class_requests.get(c, 0.0), 1e-9)
+                for c in self.class_requests}
 
     @property
     def density(self) -> float:
@@ -219,6 +234,11 @@ class Simulation:
         self.cfg = cfg or SimConfig()
         self.router = router or EqualSplitRouter()
         self.events = events or EventHub()
+        #: AdmissionController (repro.admission) wired by
+        #: ``build_simulation`` when the admission axis is enabled;
+        #: None (the default) keeps the run loop structurally identical
+        #: to the pre-admission control plane.
+        self.admission = None
         #: span tracer for the per-tick scheduling section; the no-op
         #: default keeps uninstrumented runs on the identical code path
         #: (spans only read state — see the observer-parity test)
@@ -270,6 +290,19 @@ class Simulation:
         for t in range(T):
             now = float(t)
             rps = {fn: self.trace.at(fn, t) for fn in self.trace.rps}
+            # admission phase 1: arrivals enter the bounded queues and
+            # the autoscaler's signal is derived from backlog state
+            # (queue depth/age) instead of instantaneous rps
+            if self.admission is not None:
+                with self.tracer.span("admission") as sp:
+                    signal = self.admission.enqueue(now, rps,
+                                                    self.cluster)
+                    if sp is not None:
+                        sp.attrs["now"] = now
+                        sp.attrs["queue_depth"] = round(
+                            self.admission.queue_depth(), 3)
+            else:
+                signal = rps
             # async capacity updates flush BEFORE this tick's scheduling:
             # they were queued sub-millisecond work during the previous
             # (idle) second — the paper's "table always up-to-date when
@@ -279,11 +312,15 @@ class Simulation:
                     sm = self.scheduler.metrics
                     d0, p0 = sm.decisions, sm.instances_placed
                 self.scheduler.on_tick(now)
-                self.autoscaler.tick(now, rps)
+                self.autoscaler.tick(now, signal)
                 if sp is not None:
                     sp.attrs["now"] = now
                     sp.attrs["decisions"] = sm.decisions - d0
                     sp.attrs["placed"] = sm.instances_placed - p0
+            # admission phase 2: backlog drains into the (possibly just
+            # scaled) fleet; the measurement pass routes served traffic
+            if self.admission is not None:
+                rps = self.admission.drain(now, self.cluster, res)
             self._measure(now, rps, res)
             if (self.cfg.collect_samples and self.predictor is not None
                     and t % self.cfg.sample_every_s == 0):
@@ -313,8 +350,16 @@ class Simulation:
                 st["refresh_time_s"] - svc0.get("refresh_time_s", 0.0)
             res.stale_epoch_hits = int(
                 st["stale_epoch_hits"] - svc0.get("stale_epoch_hits", 0))
+        if self.admission is not None:
+            self.admission.finalize(res)
         self.events.on_result(res)
         return res
+
+    def queue_depth_total(self) -> Optional[float]:
+        """Fleet pending-request backlog, or None when the admission
+        axis is off (observers use this to decorate tick records)."""
+        return None if self.admission is None \
+            else self.admission.queue_depth()
 
     # ------------------------------------------------------------------
 
@@ -323,7 +368,9 @@ class Simulation:
         sat_totals = {fn: self.cluster.sat_count(fn) for fn in self.specs}
         measure_cluster(now, self.cluster, self.specs, rps, sat_totals,
                         self.router, self.scheduler, self.gt, self.qos,
-                        res)
+                        res,
+                        slo=None if self.admission is None
+                        else self.admission.slo)
 
     def _collect_sample(self):
         """Runtime training-sample collection (training nodes, §3/§6):
@@ -389,7 +436,8 @@ def measure_cluster(now: float, cluster: Cluster,
                     specs: Dict[str, FunctionSpec],
                     rps: Dict[str, float], sat_totals: Dict[str, int],
                     router, scheduler: BaseScheduler, gt: GroundTruth,
-                    qos: QoSStore, res: SimResult) -> None:
+                    qos: QoSStore, res: SimResult,
+                    slo: Optional[Dict[str, str]] = None) -> None:
     """One cluster's measurement pass, shared by ``Simulation._measure``
     and the cell-sharded event core (per cell, with cell-local routers
     and traffic shares).
@@ -440,11 +488,21 @@ def measure_cluster(now: float, cluster: Cluster,
             res.requests += reqs
             res.per_fn_requests[fn] = \
                 res.per_fn_requests.get(fn, 0.0) + reqs
-            if lat > qos.qos(spec):
+            violated = lat > qos.qos(spec)
+            if violated:
                 res.violated_requests += reqs
                 res.per_fn_violations[fn] = \
                     res.per_fn_violations.get(fn, 0.0) + reqs
                 node_ok = False
+            if slo is not None:
+                # per-SLO-class accounting (admission axis only)
+                cls = slo.get(fn)
+                if cls is not None:
+                    res.class_requests[cls] = \
+                        res.class_requests.get(cls, 0.0) + reqs
+                    if violated:
+                        res.class_violations[cls] = \
+                            res.class_violations.get(cls, 0.0) + reqs
         scheduler.observe(node, node_ok, now)
 
 

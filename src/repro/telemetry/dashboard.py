@@ -303,7 +303,7 @@ def load_event_streams(events_dir: str) -> List[Dict[str, Any]]:
             continue
         path = os.path.join(events_dir, fname)
         summary: Dict[str, Any] = {
-            "file": fname, "system": None, "ticks": [],
+            "file": fname, "system": None, "ticks": [], "qdepth": [],
             "reasons": defaultdict(int), "scale": defaultdict(int),
             "spans": {}, "schedules": 0, "events": 0}
         try:
@@ -326,6 +326,10 @@ def load_event_streams(events_dir: str) -> List[Dict[str, Any]]:
                         summary["ticks"].append(
                             (rec.get("now", 0.0),
                              rec.get("density", 0.0)))
+                        if "queue_depth" in rec:
+                            summary["qdepth"].append(
+                                (rec.get("now", 0.0),
+                                 rec["queue_depth"]))
                     elif ev == "schedule":
                         summary["schedules"] += 1
                         for reason, n in (rec.get("trace") or {}).get(
@@ -508,6 +512,70 @@ def _policy_panel(bench: Dict[str, Any], slots: Dict[str, int],
         note=note)
 
 
+def _admission_panel(bench: Dict[str, Any], slots: Dict[str, int],
+                     order: List[str]) -> str:
+    """Per-SLO-class QoS comparison from the latest admission run:
+    seed-mean violation rate per class, one bar per arm, plus the
+    headline A/B metrics (density win, latency-critical excess)."""
+    latest = _latest(bench)
+    rows = [r for r in latest.get("rows", []) if r.get("system")]
+    if not rows:
+        return ""
+    arms = sorted({r["system"] for r in rows})
+    for a in arms:
+        slots[a] = _slot(a, order)
+
+    def mean(arm, key):
+        vals = [float(r.get(key, 0.0)) for r in rows
+                if r["system"] == arm]
+        return sum(vals) / len(vals) if vals else 0.0
+
+    groups = [(cls, [(a, mean(a, key)) for a in arms])
+              for cls, key in (("latency-critical", "lc_violation"),
+                               ("best-effort", "be_violation"),
+                               ("overall", "qos_violation"))]
+    met = latest.get("metrics", {})
+    note = (f"seed-mean over {len(rows) // max(len(arms), 1)} seeds · "
+            f"density win {met.get('density_win', '?')} (gated &gt; 0) "
+            f"· latency-critical excess {met.get('lc_excess', '?')} · "
+            f"queue delay p99 {met.get('queue_delay_p99', '?')}s · "
+            f"{met.get('vertical_shrinks', '?')} vertical shrinks")
+    legend = _legend([(a, slots[a]) for a in arms])
+    svg = _grouped_bars(groups, slots)
+    table = _table(
+        ["arm", "seed", "density", "qos", "lc", "be", "queue p99 s",
+         "shrinks"],
+        [[r.get(k, "") for k in (
+            "system", "seed", "density", "qos_violation",
+            "lc_violation", "be_violation", "queue_delay_p99",
+            "vertical_shrinks")] for r in rows])
+    return _card(
+        "Admission: per-SLO-class QoS by arm (latest admission run)",
+        legend + svg + table, note=note)
+
+
+def _queue_depth_panel(streams: List[Dict[str, Any]],
+                       slots: Dict[str, int],
+                       order: List[str]) -> str:
+    """Pending-request backlog over simulated time, from the tick
+    records of admission-enabled event streams."""
+    series: Dict[str, List[Tuple[float, float]]] = {}
+    for s in streams:
+        if s["qdepth"] and s["system"]:
+            prev = series.get(s["system"])
+            if prev is None or len(s["qdepth"]) > len(prev):
+                series[s["system"]] = s["qdepth"]
+    if not series:
+        return ""
+    for name in series:
+        _slot(name, order)
+    svg = _lines(series, slots, width=560, x_label="sim time (s)")
+    return _card("Queue depth over simulated time (events stream)",
+                 svg,
+                 note="fleet pending-request backlog per tick; only "
+                      "admission-enabled runs emit the gauge")
+
+
 def _density_over_time_panel(streams: List[Dict[str, Any]],
                              slots: Dict[str, int],
                              order: List[str]) -> str:
@@ -655,7 +723,11 @@ def render(root: Optional[str] = None, events_dir: Optional[str] = None,
     pol = benches.get("policy")
     if pol:
         cards.append(_policy_panel(pol, slots, order))
+    adm = benches.get("admission")
+    if adm:
+        cards.append(_admission_panel(adm, slots, order))
     cards.append(_density_over_time_panel(streams, slots, order))
+    cards.append(_queue_depth_panel(streams, slots, order))
     cards.append(_reasons_panel(streams))
     cards.append(_spans_panel(streams))
 

@@ -45,7 +45,7 @@ from .report import (bench_path, load_bench, promote_baseline,
 
 #: the studies verify.sh --bench gates by default
 DEFAULT_STUDIES = ("large_cluster", "capacity_engine", "scaling",
-                   "policy")
+                   "policy", "admission")
 
 
 @dataclass
@@ -156,6 +156,25 @@ STUDY_RULES: Dict[str, StudyRules] = {
                       Rule("learned_density_ratio", "min", "density",
                            hard=True),
                       Rule("stale_serves", "eq", None, hard=True)]),
+    "admission": StudyRules(
+        key=("system", "seed"),
+        rules=[Rule("density", "min", "density", hard=True),
+               Rule("qos_violation", "max_abs", "qos", hard=True),
+               Rule("lc_violation", "max_abs", "qos", hard=False)],
+        # the admission study's headline: the vertical-queue arm's
+        # seed-mean density win over horizontal-only must not erode
+        # (warn-first — per-seed deltas are noisy, the in-run
+        # RuntimeError gate enforces win > 0 on every bench run), the
+        # latency-critical violation excess may not drift past the
+        # absolute QoS tolerance, and queue conservation must stay at
+        # float-eps
+        metric_rules=[Rule("density_win", "min", "density",
+                           hard=False),
+                      Rule("lc_excess", "max_abs", "qos", hard=True),
+                      Rule("queue_delay_p99", "max", "latency",
+                           hard=False),
+                      Rule("conservation", "max_abs", "qos",
+                           hard=True)]),
 }
 #: fallback for studies without registered rules: gate the headline
 #: metrics if the rows carry them

@@ -181,6 +181,13 @@ class MetricsObserver(Observer):
         density = inst / nodes if nodes else 0.0
         reg.gauge("cluster.density").set(density)
         reg.histogram("cluster.density_series").observe(density)
+        # pending-request backlog; only registered when the admission
+        # axis is on (None otherwise), so off-axis snapshots carry no
+        # admission names
+        depth = sim.queue_depth_total()
+        if depth is not None:
+            reg.gauge("admission.queue_depth").set(depth)
+            reg.histogram("admission.queue_depth_series").observe(depth)
 
     def on_schedule(self, now: float, fn: str, placements,
                     trace=None) -> None:
@@ -248,6 +255,21 @@ def publish_result(registry: MetricsRegistry, res,
         g("run.cold_start_ms.mean").set(a.mean_cold_start_ms)
         g("run.cold_start_ms.p50").set(a.cold_start_ms.p50)
         g("run.cold_start_ms.p99").set(a.cold_start_ms.p99)
+    if res.class_requests:
+        # admission axis (repro.admission): per-SLO-class QoS, queue
+        # delay distribution, drops and vertical resize totals
+        for cls, rate in res.class_violation_rate().items():
+            g(f"run.class.{cls}.requests").set(
+                res.class_requests.get(cls, 0.0))
+            g(f"run.class.{cls}.violation_rate").set(rate)
+        c("run.admission.dropped").inc(res.dropped_requests)
+        c("run.admission.vertical_grows").inc(res.vertical_grows)
+        c("run.admission.vertical_shrinks").inc(res.vertical_shrinks)
+        g("run.admission.queue_depth_peak").set(res.queue_depth_peak)
+        q = res.queue_delay_s
+        g("run.admission.queue_delay_s.mean").set(q.mean)
+        g("run.admission.queue_delay_s.p50").set(q.p50)
+        g("run.admission.queue_delay_s.p99").set(q.p99)
     if engine_stats:
         for k, v in engine_stats.items():
             g(f"run.engine.{k}").set(v)

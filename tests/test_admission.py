@@ -1,0 +1,433 @@
+"""Admission subsystem (``repro.admission``): queue conservation,
+vertical-resize capacity safety, SLO-class accounting, and the
+admission-off bit-parity gates.
+
+Tier-1 gates for the admission axis:
+
+  * **Queue conservation** — every request that ever arrived is exactly
+    one of {released, dropped, still pending}, under randomized
+    admit/release/drop sequences (property test) and end to end through
+    a full platform run.
+  * **Vertical capacity safety** — a shrink is only ever applied on a
+    node whose live packing sits within its predicted-QoS capacity
+    (checked at resize time via the same capacity-table lookup the
+    resizer gates on).
+  * **Admission-off bit-parity** — a ``PlatformConfig`` with
+    ``admission.enabled=False`` builds the exact pre-admission control
+    plane: every deterministic counter matches a config with no
+    admission section at all, and the admission code is structurally
+    absent (``Simulation.admission is None``).
+  * **cells=1 parity with admission on** — the single-cell event core
+    drives the per-cell controller identically to the legacy loop:
+    class counters, queue totals and density match bit-for-bit.
+  * **Trace schema v3** — DecisionTraces carry queue depth/age and SLO
+    class; v2 records (no admission fields) stay readable by the
+    policy dataset parser.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.admission import (ADMIT_STAGES, RELEASE_STAGES, BEST_EFFORT,
+                             LATENCY_CRITICAL, AdmissionConfig,
+                             AdmissionController, BoundedFifoAdmit,
+                             FunctionQueue, GreedyQueueRelease,
+                             PacedQueueRelease, ShedOldestAdmit,
+                             VerticalScaler, delay_budget_s,
+                             tag_slo_classes)
+from repro.core import make_scenario, scenario_simulation, scenario_world
+from repro.core.cells import cell_scenario_simulation
+from repro.core.events import Observer
+from repro.core.pipeline import (CANDIDATE_FEATURES, DecisionTrace,
+                                 TRACE_SCHEMA_VERSION)
+from repro.platform import Platform, PlatformConfig, PlatformConfigError
+from repro.policy import load_traces
+
+_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Queue conservation + backpressure (property tests)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 400)),
+                    min_size=1, max_size=60),
+       cap=st.integers(10, 500))
+def test_queue_conservation_random_ops(ops, cap):
+    """arrived == released + dropped + depth under any interleaving of
+    push / pop / drop_newest / drop_oldest, and depth never negative."""
+    q = FunctionQueue("fn", float(cap))
+    for i, (op, amount) in enumerate(ops):
+        amt = amount / 7.0          # fractional request mass
+        if op == 0:
+            q.push(float(i), amt)
+        elif op == 1:
+            buckets = q.pop(amt)
+            assert all(c >= 0.0 for _t, c in buckets)
+            # FIFO: released buckets come oldest-first
+            times = [t for t, _c in buckets]
+            assert times == sorted(times)
+        elif op == 2:
+            q.drop_newest(amt)
+        else:
+            q.drop_oldest(amt)
+        assert q.depth >= -_EPS
+        assert q.conservation_error() < _EPS
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrivals=st.lists(st.integers(0, 300), min_size=5, max_size=40),
+       cap_s=st.integers(1, 8), rate=st.integers(5, 120),
+       admit_i=st.integers(0, 1), release_i=st.integers(0, 1))
+def test_backpressure_bounded_storm(arrivals, cap_s, rate, admit_i,
+                                    release_i):
+    """A burst storm through any admit/release stage pair: the queue
+    never exceeds its bound, per-tick releases never exceed the service
+    rate, released delays are non-negative, and conservation holds."""
+    admit = (BoundedFifoAdmit(), ShedOldestAdmit())[admit_i]
+    release = (GreedyQueueRelease(), PacedQueueRelease())[release_i]
+    cap = float(cap_s * rate)
+    q = FunctionQueue("fn", cap)
+    for t, arr in enumerate(arrivals):
+        now = float(t)
+        accepted, dropped = admit.admit(q, float(arr), now)
+        assert dropped >= 0.0
+        if admit_i == 0:
+            # bounded-fifo rejects at the door: overflow never enters
+            assert accepted + dropped == pytest.approx(float(arr))
+        else:
+            # shed-oldest admits everything; drops come from backlog
+            assert accepted == pytest.approx(float(arr))
+        assert q.depth <= cap + _EPS
+        buckets = release.release(q, float(rate), now)
+        got = sum(c for _t, c in buckets)
+        assert got <= rate + _EPS
+        assert all(now - t0 >= -_EPS for t0, _c in buckets)
+        assert q.conservation_error() < _EPS
+    # total backlog is bounded by the cap at every point, so the queue
+    # really applied backpressure instead of absorbing the whole storm
+    assert q.depth <= cap + _EPS
+    assert q.arrived == pytest.approx(
+        q.released + q.dropped + q.depth)
+
+
+# ---------------------------------------------------------------------------
+# SLO tagging + budgets
+# ---------------------------------------------------------------------------
+
+
+def test_slo_tagging_deterministic_and_stable():
+    fns = [f"fn{i:02d}" for i in range(40)]
+    tags = tag_slo_classes(fns, 0.5, seed=0)
+    assert tags == tag_slo_classes(fns, 0.5, seed=0)
+    assert set(tags.values()) == {LATENCY_CRITICAL, BEST_EFFORT}
+    # population growth never re-tags existing functions
+    grown = tag_slo_classes(fns + ["fn99"], 0.5, seed=0)
+    assert all(grown[fn] == tags[fn] for fn in fns)
+    # fraction extremes
+    assert set(tag_slo_classes(fns, 0.0).values()) == {LATENCY_CRITICAL}
+    assert set(tag_slo_classes(fns, 1.0).values()) == {BEST_EFFORT}
+    # a different seed draws a different partition
+    assert tag_slo_classes(fns, 0.5, seed=1) != tags
+
+
+def test_delay_budget_per_class():
+    assert delay_budget_s(LATENCY_CRITICAL, 0.25, 8.0) == 0.25
+    assert delay_budget_s(BEST_EFFORT, 0.25, 8.0) == 8.0
+    # unknown class falls back to the strict budget
+    assert delay_budget_s(None, 0.25, 8.0) == 0.25
+
+
+# ---------------------------------------------------------------------------
+# Platform wiring + config validation
+# ---------------------------------------------------------------------------
+
+_SCENARIO = {"kind": "burst-storm", "n_functions": 8, "duration_s": 80,
+             "target_nodes": 12, "seed": 5}
+
+
+def _platform_cfg(admission=None):
+    cfg = {"scenario": dict(_SCENARIO),
+           "scheduler": {"name": "harvesting"}}
+    if admission is not None:
+        cfg["admission"] = admission
+    return cfg
+
+
+def test_admission_section_roundtrip_and_registry():
+    cfg = PlatformConfig.from_dict(_platform_cfg(
+        {"enabled": True, "vertical": True, "signal": "queue",
+         "best_effort_frac": 0.25, "admit": "shed-oldest",
+         "queue_release": "paced"}))
+    assert cfg.admission.enabled and cfg.admission.vertical
+    assert cfg.admission.best_effort_frac == 0.25
+    # the admission stages live in the platform stage registry
+    assert set(ADMIT_STAGES) == {"bounded-fifo", "shed-oldest"}
+    assert set(RELEASE_STAGES) == {"greedy", "paced"}
+
+
+@pytest.mark.parametrize("bad", [
+    {"vertical": True},                          # vertical needs enabled
+    {"enabled": True, "signal": "cpu"},          # unknown signal
+    {"enabled": True, "best_effort_frac": 1.5},  # frac out of range
+    {"enabled": True, "admit": "nope"},          # unregistered stage
+    {"enabled": True, "queue_release": "nope"},
+    {"enabled": True, "min_share": 0.0},         # share out of (0, 1]
+    {"enabled": True, "target_drain_s": 0.0},
+])
+def test_admission_section_validation(bad):
+    # unknown registry names surface as the registry's ValueError, the
+    # consistency rules as PlatformConfigError (itself a ValueError)
+    with pytest.raises(ValueError):
+        PlatformConfig.from_dict(_platform_cfg(bad)).validate()
+
+
+def test_unknown_stage_raises_in_controller():
+    with pytest.raises(ValueError, match="unknown admission stage"):
+        AdmissionController({}, AdmissionConfig(admit="nope"))
+
+
+# ---------------------------------------------------------------------------
+# Admission-off bit-parity
+# ---------------------------------------------------------------------------
+
+
+def _det(res) -> dict:
+    """Deterministic counters (mirrors tests/test_cells.py plus the
+    admission-axis fields)."""
+    s, a = res.sched, res.scaling
+    return {
+        "requests": res.requests,
+        "violated_requests": res.violated_requests,
+        "instance_seconds": res.instance_seconds,
+        "node_seconds": res.node_seconds,
+        "nodes_peak": res.nodes_peak,
+        "per_fn_requests": dict(res.per_fn_requests),
+        "decisions": s.decisions, "placed": s.instances_placed,
+        "fast": s.fast, "slow": s.slow, "failed": s.failed,
+        "real_cold": a.real_cold_starts,
+        "logical_cold": a.logical_cold_starts,
+        "releases": a.releases, "evictions": a.evictions,
+        "class_requests": dict(res.class_requests),
+        "class_violations": dict(res.class_violations),
+        "dropped": res.dropped_requests,
+        "queue_depth_peak": res.queue_depth_peak,
+        "vertical": (res.vertical_grows, res.vertical_shrinks),
+    }
+
+
+def test_disabled_section_is_bit_identical_to_no_section():
+    """``admission.enabled=False`` must build the exact pre-admission
+    control plane — structural absence, not a pass-through."""
+    p1 = Platform.build(config=_platform_cfg())
+    r1 = p1.run()
+    p2 = Platform.build(config=_platform_cfg({"enabled": False}))
+    assert p2.simulation.admission is None
+    assert p2.autoscaler.admission is None
+    r2 = p2.run()
+    a, b = _det(r1), _det(r2)
+    diverged = sorted(k for k in a if a[k] != b[k])
+    assert not diverged, f"diverged on {diverged}"
+    assert r1.density == r2.density
+    assert r1.qos_violation_rate == r2.qos_violation_rate
+    # no admission accounting leaked into the off-axis run
+    assert not r2.class_requests and r2.queue_depth_peak == 0.0
+
+
+def test_cells1_parity_with_admission_enabled():
+    """The single-cell event core must drive the per-cell controller
+    identically to the legacy run loop (enqueue before the autoscaler,
+    drain before measurement) — bit-exact counters either way."""
+    adm = AdmissionConfig(enabled=True, signal="queue")
+    scenario = make_scenario("burst-storm", n_functions=6,
+                             duration_s=80, target_nodes=16, seed=3)
+    world = scenario_world(scenario, n_train=600, n_trees=8)
+    world.gt.reseed()
+    legacy = scenario_simulation(scenario, "harvesting", world=world,
+                                 admission=adm).run()
+    world.gt.reseed()
+    cells = cell_scenario_simulation(scenario, "harvesting", n_cells=1,
+                                     world=world, admission=adm).run()
+    a, b = _det(legacy), _det(cells)
+    diverged = sorted(k for k in a if a[k] != b[k])
+    assert not diverged, f"diverged on {diverged}"
+    # the admission axis was actually live in both runs
+    assert legacy.class_requests
+
+
+# ---------------------------------------------------------------------------
+# End-to-end accounting + vertical capacity safety
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def admission_run():
+    plat = Platform.build(config=_platform_cfg(
+        {"enabled": True, "vertical": True, "signal": "queue",
+         "target_drain_s": 1.0}))
+    checker = _ShrinkSafetyObserver(plat)
+    plat.add_observer(checker)
+    res = plat.run()
+    return plat, res, checker
+
+
+class _ShrinkSafetyObserver(Observer):
+    """At every vertical_shrink emission (synchronous with the resize
+    pass, before any further mutation), re-check the resizer's gate:
+    each node carrying a reduced share must pack within its
+    predicted-QoS capacity per the same hint-then-table lookup."""
+
+    def __init__(self, plat):
+        self.plat = plat
+        self.checked = 0
+        self.violations = []
+
+    def on_scale(self, now, fn, event, count):
+        if event != "vertical_shrink":
+            return
+        svc = self.plat.scheduler.prediction_service
+        for node in self.plat.cluster.nodes_with(fn):
+            if fn not in node.shares:
+                continue
+            cap = svc.capacity_hint(svc.node_coloc(node), fn,
+                                    node_res=node.res)
+            if cap is None:
+                entry = node.table.get(fn)
+                cap = entry.capacity if entry is not None else None
+            if cap is None:
+                continue    # table entry expired since the resize
+            self.checked += 1
+            total = node.funcs[fn].total
+            if total > cap:
+                self.violations.append((now, fn, node.id, total, cap))
+
+
+def test_vertical_shrinks_respect_capacity_table(admission_run):
+    plat, res, checker = admission_run
+    assert res.vertical_shrinks > 0, "no vertical activity to check"
+    assert checker.checked > 0
+    assert not checker.violations, checker.violations[:5]
+    # shrunk shares are real reservations in (0, 1)
+    shares = [s for node in plat.cluster.nodes.values()
+              for s in node.shares.values()]
+    assert shares and all(0.0 < s < 1.0 for s in shares)
+    # and they raise per-function harvest bounds, never past bound_cap
+    bounds = plat.scheduler.harvest_bounds
+    assert bounds
+    assert all(plat.scheduler.harvest_headroom <= b <= 0.98
+               for b in bounds.values())
+
+
+def test_per_class_accounting_conserves(admission_run):
+    plat, res, checker = admission_run
+    adm = plat.simulation.admission
+    assert adm.conservation_error() < _EPS
+    # every request is accounted to exactly one class
+    assert set(res.class_requests) <= {LATENCY_CRITICAL, BEST_EFFORT}
+    assert sum(res.class_requests.values()) == \
+        pytest.approx(res.requests, rel=1e-6)
+    for cls, viol in res.class_violations.items():
+        assert 0.0 <= viol <= res.class_requests[cls] + _EPS
+    # queue totals reconcile with the SimResult drops
+    totals = adm.totals()
+    assert totals["dropped"] == pytest.approx(res.dropped_requests)
+    assert res.queue_depth_peak >= totals["depth"] - _EPS
+
+
+def test_vertical_scaler_class_policy():
+    """Unit policy checks: best-effort shrinks to the floor and packs
+    to bound_cap; latency-critical keeps the guard both ways; queue
+    pressure forces full reservation."""
+    specs = {"be": None, "lc": None}
+    slo = {"be": BEST_EFFORT, "lc": LATENCY_CRITICAL}
+    v = VerticalScaler(specs, slo, min_share=0.5)
+    assert v.target_share("be", queue_depth=5.0) == 1.0
+    assert v.target_share("be", queue_depth=0.0) == 0.5
+    assert v.target_share("lc", queue_depth=0.0) == \
+        pytest.approx(0.5 + v.lc_guard)
+    v.share = {"be": 0.5, "lc": 0.65}
+    hb = v.harvest_bound("be", headroom=0.85)
+    assert hb == pytest.approx(0.98)            # min(cap, .85/.5)
+    # latency-critical cap keeps lc_guard below bound_cap but never
+    # drops under the scheduler's global headroom
+    hl = v.harvest_bound("lc", headroom=0.85)
+    assert hl == pytest.approx(max(0.85, 0.98 - v.lc_guard))
+    hl_low = v.harvest_bound("lc", headroom=0.5)
+    assert hl_low == pytest.approx(0.5 / 0.65)  # min(0.83, .5/.65)
+    assert v.harvest_bound("untouched", headroom=0.85) is None
+
+
+# ---------------------------------------------------------------------------
+# DecisionTrace schema v3 (+ v2 stays readable)
+# ---------------------------------------------------------------------------
+
+
+def _schedule_rec(trace_dict, now):
+    return {"event": "schedule", "now": now, "fn": trace_dict["fn"],
+            "placed": 1, "trace": trace_dict}
+
+
+def test_trace_v3_fields_and_v2_readable():
+    assert TRACE_SCHEMA_VERSION == 3
+    nf = len(CANDIDATE_FEATURES)
+    v3 = DecisionTrace(scheduler="jiagu-pipeline", fn="fn00", now=1.0,
+                       requested=1)
+    v3.candidates = [(0, [0.1] * nf), (1, [0.2] * nf)]
+    v3.chosen_node = 1
+    v3.queue_depth = 7.5
+    v3.queue_age_s = 0.4
+    v3.slo_class = BEST_EFFORT
+    d3 = v3.summary()
+    assert d3["schema_version"] == 3
+    assert d3["queue_depth"] == 7.5
+    assert d3["slo_class"] == BEST_EFFORT
+    # admission off -> the v3 keys stay absent (v2-shaped record)
+    off = DecisionTrace(scheduler="jiagu-pipeline", fn="fn01", now=2.0,
+                        requested=1)
+    off.candidates = [(0, [0.3] * nf)]
+    off.chosen_node = 0
+    assert "queue_depth" not in off.summary()
+    # a stored v2 record (pre-admission artifact) and the v3 records
+    # all parse into training rows; only versionless (v1) is skipped
+    v2 = {"schema_version": 2, "now": 3.0, "fn": "fn02",
+          "requested": 1, "candidates": [[0, [0.4] * nf]],
+          "chosen_node": 0}
+    v1 = {"now": 4.0, "fn": "fn03", "candidates": [[0, [0.5] * nf]],
+          "chosen_node": 0}
+    ds = load_traces([_schedule_rec(d3, 1.0),
+                      _schedule_rec(off.summary(), 2.0),
+                      _schedule_rec(v2, 3.0),
+                      _schedule_rec(v1, 4.0)])
+    assert len(ds.decisions) == 3
+    assert ds.skipped_versionless == 1
+    assert [d.fn for d in ds.decisions] == ["fn00", "fn01", "fn02"]
+
+
+def test_autoscaler_stamps_traces_with_admission_context():
+    """A pipeline-scheduler run with admission on emits v3 traces whose
+    slo_class is populated (queue context rides every decision)."""
+    cfg = {"scenario": dict(_SCENARIO),
+           "scheduler": {"name": "jiagu-pipeline"},
+           "admission": {"enabled": True, "signal": "queue"}}
+    seen = []
+
+    class Collect(Observer):
+        def on_schedule(self, now, fn, placements, trace=None):
+            if trace is not None:
+                seen.append(trace)
+
+    plat = Platform.build(config=cfg, observers=[Collect()])
+    plat.run()
+    assert seen
+    assert all(t.slo_class in (LATENCY_CRITICAL, BEST_EFFORT)
+               for t in seen)
+    assert all(t.queue_depth >= 0.0 and t.queue_age_s >= 0.0
+               for t in seen)

@@ -3,7 +3,7 @@ versioned PolicyStore, and the hot-swapped ``"learned"`` stack.
 
 The fixture ``tests/data/policy_traces.jsonl`` is a checked-in
 ``JsonlObserver`` stream of a short feature-traced jiagu-pipeline run
-(schema v2: per-candidate feature rows + chosen node + feasibility
+(current schema: per-candidate feature rows + chosen node + feasibility
 rejections on every schedule record, cumulative QoS counters on every
 tick, a trailing run summary), with two hand-made versionless (v1)
 schedule records spliced in — old artifacts must stay readable."""
